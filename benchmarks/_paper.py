@@ -1,0 +1,47 @@
+"""Shared calibration for the paper-reproduction benchmarks.
+
+Two calibration sets, both taken from the paper's own measurements:
+  * THROUGHPUT presets (Fig.6/Fig.8): per-accelerator *achieved* TFLOPs on
+    Llama2-70B — AMD 93.81, GPU-A 48.08 (§4.4.1) — encoded as effective
+    TFLOPs.  This is the paper's 'profile a small sample, predict the big
+    cluster' workflow with the paper itself as the profile.
+  * MFU presets (Fig.7): measured homogeneous-cluster MFUs with equal peaks
+    (the only algebra consistent with the paper's stated bounds 50.85 /
+    33.85 / 35.90) — cluster.py NVIDIA/GPU_A/GPU_B/GPU_C/AMD.
+"""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import cluster as C  # noqa: E402
+
+# Fig.6/8 calibration: effective (achieved) TFLOPs per accelerator
+AMD_TP = C.DeviceType("amd", peak_tflops=383.0, mfu=93.81 / 383.0,
+                      hbm_gb=64)
+GPUA_TP = C.DeviceType("gpu-a", peak_tflops=280.0, mfu=48.08 / 280.0,
+                       hbm_gb=64)
+
+
+def hetero_cluster(n_nodes: int) -> C.ClusterSpec:
+    """Paper heterogeneous cluster at 1:5 AMD:GPU-A node ratio."""
+    assert n_nodes % 6 == 0
+    return C.ClusterSpec(groups=(C.NodeGroup(AMD_TP, n_nodes // 6),
+                                 C.NodeGroup(GPUA_TP, n_nodes - n_nodes // 6)))
+
+
+def amd_cluster(n_nodes: int) -> C.ClusterSpec:
+    return C.ClusterSpec(groups=(C.NodeGroup(AMD_TP, n_nodes),))
+
+
+def gpua_cluster(n_nodes: int) -> C.ClusterSpec:
+    return C.ClusterSpec(groups=(C.NodeGroup(GPUA_TP, n_nodes),))
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6

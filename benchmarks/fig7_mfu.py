@@ -1,0 +1,56 @@
+"""Paper Fig.7: MFU of Llama2-70B training on three heterogeneous combos,
+uniform vs non-uniform segmentation, against the theoretical upper bound.
+
+Paper numbers (non-uniform):
+  a) Nvidia + GPU-A (1:1):   49.60% of bound 50.85%  -> 97.54%
+  b) AMD    + GPU-B (1:1):   31.50% of bound 33.85%  -> 93.05%
+  c) AMD    + GPU-C (1:5):   35.00% of bound 35.90%  -> 97.49%
+"""
+from __future__ import annotations
+
+from benchmarks._paper import timed
+from repro.configs.llama2_paper import LLAMA2_70B
+from repro.core import cluster as C
+from repro.core import planner
+
+SEQ = 4096
+
+COMBOS = {
+    "nvidia+A": (C.ClusterSpec(groups=(C.NodeGroup(C.NVIDIA, 6),
+                                       C.NodeGroup(C.GPU_A, 6))),
+                 0.4960, 0.5085),
+    "amd+B": (C.ClusterSpec(groups=(C.NodeGroup(C.AMD, 6),
+                                    C.NodeGroup(C.GPU_B, 6))),
+              0.3150, 0.3385),
+    "amd+C": (C.ClusterSpec(groups=(C.NodeGroup(C.AMD, 20),
+                                    C.NodeGroup(C.GPU_C, 100))),
+              0.3500, 0.3590),
+}
+
+
+def run(verbose: bool = True):
+    rows = []
+    for name, (cl, paper_mfu, paper_bound) in COMBOS.items():
+        assert abs(cl.theoretical_mfu - paper_bound) < 1e-3
+        G = 640 if name != "amd+C" else 6400
+        res, us = timed(
+            planner.search, cl, LLAMA2_70B, global_batch=G, seq_len=SEQ,
+            pp_options=[2, 4, 6, 10, 12], tp_options=[8],
+            micro_bs_options=[1], require_fit=False,
+            schedule="1f1b-eager", include_tp_comm=False)
+        p = res.prediction
+        ratio = p.mfu_of_bound
+        rows.append((f"fig7/{name}_mfu", us, round(p.mfu, 4)))
+        rows.append((f"fig7/{name}_pct_of_bound", 0.0, round(ratio, 4)))
+        if verbose:
+            print(f"  {name:10s} mfu={p.mfu*100:6.2f}% "
+                  f"bound={p.theoretical_mfu*100:5.2f}% "
+                  f"ratio={ratio*100:6.2f}% "
+                  f"(paper {paper_mfu*100:.2f}/{paper_bound*100:.2f}"
+                  f"={100*paper_mfu/paper_bound:.2f}%)  "
+                  f"plan={res.plan.describe()}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Roofline table (deliverable g): reads the dry-run artifacts and renders
+EXPERIMENTS.md §Roofline rows — three terms, dominant bottleneck, useful-work
+ratio, and the bound MFU — per (arch x shape) on the single-pod mesh."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+
+def load(mesh: str = "single"):
+    recs = []
+    for f in sorted(ART.glob(f"*__{mesh}.json")):
+        d = json.loads(f.read_text())
+        if d.get("ok"):
+            recs.append(d)
+    return recs
+
+
+def table(mesh: str = "single") -> str:
+    recs = load(mesh)
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "useful_flops | mfu_bound | peak_GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for d in recs:
+        r = d["roofline"]
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {r['compute_s']:.4g} | "
+            f"{r['memory_s']:.4g} | {r['collective_s']:.4g} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.3f} | "
+            f"{r['mfu_bound']:.3f} | {d['mem_per_device']['peak_gb']} |")
+    return "\n".join(lines)
+
+
+def run(verbose: bool = True):
+    recs = load()
+    rows = []
+    for d in recs:
+        r = d["roofline"]
+        rows.append((f"roofline/{d['arch']}__{d['shape']}", 0.0,
+                     r["mfu_bound"]))
+    if verbose:
+        print(table())
+        doms = {}
+        for d in recs:
+            doms[d["roofline"]["dominant"]] = \
+                doms.get(d["roofline"]["dominant"], 0) + 1
+        print(f"  dominant-term census: {doms}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

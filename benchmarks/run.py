@@ -1,0 +1,33 @@
+"""Benchmark entry point — one function per paper table/figure plus the
+roofline harness.  Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+
+def main() -> None:
+    from benchmarks import (fig6a_segmentation, fig6bf_scaling, fig7_mfu,
+                            fig8_e2e, roofline)
+    rows = []
+    for mod, title in ((fig6a_segmentation, "Fig.6a seg comparison"),
+                       (fig6bf_scaling, "Fig.6b-f scaling"),
+                       (fig7_mfu, "Fig.7 MFU vs bound"),
+                       (fig8_e2e, "Fig.8 end-to-end"),
+                       (roofline, "Roofline (dry-run)")):
+        print(f"== {title} ==")
+        try:
+            rows += mod.run(verbose=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"  ERROR: {type(e).__name__}: {e}")
+            rows.append((f"{mod.__name__}/error", 0.0, -1))
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

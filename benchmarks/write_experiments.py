@@ -1,0 +1,177 @@
+"""Compose EXPERIMENTS.md from dry-run artifacts + paper-bench outputs +
+the perf-iteration log (benchmarks/artifacts/perf_log.json).
+
+    PYTHONPATH=src:. python benchmarks/write_experiments.py
+"""
+from __future__ import annotations
+
+import io
+import json
+import sys
+from contextlib import redirect_stdout
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT))
+
+ART = ROOT / "benchmarks" / "artifacts" / "dryrun"
+PERF_LOG = ROOT / "benchmarks" / "artifacts" / "perf_log.json"
+
+
+def _cells(mesh):
+    out = []
+    for f in sorted(ART.glob(f"*__{mesh}.json")):
+        out.append(json.loads(f.read_text()))
+    return out
+
+
+def dryrun_section() -> str:
+    lines = ["## §Dry-run", "",
+             "Every (architecture × input shape × mesh) cell is "
+             "`.lower().compile()`d for the production meshes — single-pod "
+             "(16,16)=256 chips and multi-pod (2,16,16)=512 chips (the "
+             "`pod` axis carries HETHUB pipeline stages for train cells, "
+             "DP for serving). `memory_analysis()` / `cost_analysis()` "
+             "below; collective schedule parsed from partitioned HLO. "
+             "Artifacts: `benchmarks/artifacts/dryrun/*.json`.", ""]
+    for mesh in ("single", "multi"):
+        cells = _cells(mesh)
+        ok = sum(1 for c in cells if c.get("ok"))
+        skip = sum(1 for c in cells if c.get("skipped"))
+        fail = [c for c in cells if c.get("error")]
+        lines.append(f"### {mesh}-pod mesh: {ok} compiled, {skip} skipped "
+                     f"(documented long_500k inapplicability), "
+                     f"{len(fail)} failed")
+        lines.append("")
+        lines.append("| arch | shape | parallelism | peak GB/dev | "
+                     "FLOPs/dev | collective counts |")
+        lines.append("|---|---|---|---|---|---|")
+        for c in cells:
+            if c.get("skipped"):
+                lines.append(f"| {c['arch']} | {c['shape']} | — | — | — | "
+                             f"skipped: quadratic attn at 500k |")
+                continue
+            if c.get("error"):
+                lines.append(f"| {c['arch']} | {c['shape']} | — | — | — | "
+                             f"FAILED: {c['error'][:50]} |")
+                continue
+            cc = c["collectives"]["count_by_op"]
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | {c.get('parallelism','')} "
+                f"| {c['mem_per_device']['peak_gb']} "
+                f"| {c['cost']['flops_per_device']:.2e} "
+                f"| {cc} |")
+        lines.append("")
+    return "\n".join(lines)
+
+
+def roofline_section() -> str:
+    from benchmarks import roofline as rl
+    lines = ["## §Roofline", "",
+             "Single-pod (256 × TPU v5e: 197 TF bf16, 819 GB/s HBM, "
+             "50 GB/s/link) terms per cell, from `cost_analysis()` + "
+             "partitioned-HLO collective volumes. FLOPs/bytes are "
+             "probe-corrected for scan bodies (XLA counts while-loop bodies "
+             "once — two unrolled shallow probes give exact per-layer "
+             "costs, the paper's own profile-small-predict-big method); "
+             "collective volume uses per-computation attribution × scan "
+             "trip count. `useful_flops` = MODEL_FLOPS(6·N·D, active-param "
+             "for MoE) / HLO_FLOPs. `mfu_bound` = achievable MFU if only "
+             "the dominant term remained.", "",
+             rl.table(), "",
+             "Caveats: `memory_s` comes from the CPU-backend HLO "
+             "(less fusion than TPU ⇒ bytes inflated; treated as a "
+             "relative optimization target). Unchunked-attention probes "
+             "upper-bound the S² score traffic that the Pallas flash "
+             "kernel (kernels/flash_attention.py) eliminates on real "
+             "TPU.", ""]
+    recs = [c for c in _cells("single") if c.get("ok")]
+    doms = {}
+    for c in recs:
+        doms[c["roofline"]["dominant"]] = \
+            doms.get(c["roofline"]["dominant"], 0) + 1
+    lines.append(f"Dominant-term census: {doms}.")
+    lines.append("")
+    # per-cell one-liner: what moves the dominant term
+    hints = {
+        ("collective", "train"): "TP=16 activation all-reduces dominate — "
+        "switch the model axis to FSDP/ZeRO-3 (see §Perf) or raise per-"
+        "device batch",
+        ("memory", "train"): "activation + weight streaming — fuse "
+        "attention (Pallas flash), tighten remat policy",
+        ("memory", "prefill"): "S² attention score HBM traffic — Pallas "
+        "flash attention keeps scores in VMEM",
+        ("memory", "decode"): "weight/KV streaming is inherent at batch≤"
+        "128: raise batch or quantize KV (int8) to halve traffic",
+        ("collective", "decode"): "flash-decode LSE-combine psums — "
+        "shrink by batching decode heads or kv-cache layout",
+        ("compute", "train"): "near roofline — reduce remat recompute",
+    }
+    lines.append("Per-cell dominant-term remedies (one line each):")
+    for c in recs:
+        k = (c["roofline"]["dominant"], c["shape"].split("_")[0]
+             .replace("long", "decode"))
+        k = (k[0], "decode" if k[1] == "decode" else k[1])
+        lines.append(f"- `{c['arch']} × {c['shape']}`: "
+                     f"{c['roofline']['dominant']}-bound — "
+                     f"{hints.get(k, 'see §Perf')}.")
+    return "\n".join(lines)
+
+
+def bench_section() -> str:
+    buf = io.StringIO()
+    from benchmarks import run as bench_run
+    with redirect_stdout(buf):
+        bench_run.main()
+    return ("## §Paper-figure reproduction (benchmarks)\n\n```\n"
+            + buf.getvalue() + "\n```\n")
+
+
+def perf_section() -> str:
+    if not PERF_LOG.exists():
+        return "## §Perf\n\n(perf log not yet generated)\n"
+    log = json.loads(PERF_LOG.read_text())
+    lines = ["## §Perf — hillclimbing log", "",
+             log.get("intro", ""), ""]
+    for cell in log["cells"]:
+        lines.append(f"### {cell['name']}")
+        lines.append("")
+        lines.append(f"*Why this cell*: {cell['why']}")
+        lines.append("")
+        lines.append("| iter | change | hypothesis | compute_s | memory_s "
+                     "| collective_s | mfu_bound | verdict |")
+        lines.append("|---|---|---|---|---|---|---|---|")
+        for it in cell["iters"]:
+            r = it["roofline"]
+            lines.append(
+                f"| {it['iter']} | {it['change']} | {it['hypothesis']} "
+                f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+                f"| {r['collective_s']:.3f} | {r['mfu_bound']:.3f} "
+                f"| {it['verdict']} |")
+        lines.append("")
+        lines.append(cell.get("conclusion", ""))
+        lines.append("")
+    return "\n".join(lines)
+
+
+def main():
+    parts = [
+        "# EXPERIMENTS — HETHUB on JAX/TPU",
+        "",
+        "Paper: *HETHUB: A Distributed Training System with Heterogeneous "
+        "Cluster for Large-Scale Models* (CS.DC 2024). "
+        "All artifacts regenerate with the commands in README.md.",
+        "",
+        bench_section(),
+        dryrun_section(),
+        roofline_section(),
+        "",
+        perf_section(),
+    ]
+    (ROOT / "EXPERIMENTS.md").write_text("\n".join(parts))
+    print("wrote", ROOT / "EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Per-architecture configs (assigned pool) + Llama2 paper family + shapes."""

@@ -1,0 +1,27 @@
+"""Assigned input-shape sets. Each LM arch pairs with all four shapes;
+decode_*/long_* lower serve_step; long_500k only for sub-quadratic archs."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    # analysis-only shape (quadratic/linear byte decomposition in §Perf)
+    "prefill_8k": ShapeSpec("prefill_8k", 8192, 32, "prefill"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable(arch: str, shape: str, subquadratic: bool) -> bool:
+    if shape == "long_500k" and not subquadratic:
+        return False  # full attention is quadratic: documented skip
+    return True

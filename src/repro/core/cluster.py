@@ -1,0 +1,133 @@
+"""Heterogeneous cluster description (paper §3.2 'sampling' inputs).
+
+A ClusterSpec is what the distributed performance predictor and the automatic
+parallel planner consume: per-device-type compute/memory characteristics and
+the link matrix between node groups.  The paper profiles these on a small
+sample cluster; here they come from hardware constants (and, for the TPU
+dry-run, can be *calibrated* from compiled-HLO cost analysis).
+
+Paper hardware constants (§4) are provided as presets, including the
+measured homogeneous-cluster MFUs used for the Fig.7/Fig.8 reproduction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceType:
+    name: str
+    peak_tflops: float          # fp16/bf16 peak per accelerator
+    mfu: float                  # measured homogeneous-cluster MFU (0..1)
+    hbm_gb: float = 64.0
+    hbm_gbps: float = 1600.0
+
+    @property
+    def effective_tflops(self) -> float:
+        """Achievable per-accelerator throughput = peak x homogeneous MFU
+        (the paper's Eq.2 calibration)."""
+        return self.peak_tflops * self.mfu
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeGroup:
+    """A homogeneous island: n_nodes nodes of one device type."""
+    device: DeviceType
+    n_nodes: int
+    accel_per_node: int = 8
+    intra_node_gbps: float = 300.0 * 8   # NVLink/PCIe-class, in Gb/s
+
+    @property
+    def n_accel(self) -> int:
+        return self.n_nodes * self.accel_per_node
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    groups: Tuple[NodeGroup, ...]
+    # intra-group inter-node fabric (IB): theoretical / measured Gb/s
+    ib_gbps: float = 200.0
+    ib_eff: float = 0.85          # paper: 160-180 of 200 actual
+    # inter-group (heterogeneous boundary) fabric (Ethernet): Gb/s
+    eth_gbps: float = 25.0
+    eth_eff: float = 0.76         # paper: 18-20 of 25 actual
+    pcie_gbps: float = 64.0 * 8   # CPU-staged transport hop
+
+    @property
+    def n_accel(self) -> int:
+        return sum(g.n_accel for g in self.groups)
+
+    @property
+    def peak_tflops_mean(self) -> float:
+        """Paper Eq.2: heterogeneous peak = mean over accelerators."""
+        return (sum(g.n_accel * g.device.peak_tflops for g in self.groups)
+                / self.n_accel)
+
+    @property
+    def theoretical_mfu(self) -> float:
+        """Upper-bound MFU: every accelerator at its homogeneous MFU
+        (count- and peak-weighted; validated against Fig.7a/b/c)."""
+        num = sum(g.n_accel * g.device.peak_tflops * g.device.mfu
+                  for g in self.groups)
+        den = sum(g.n_accel * g.device.peak_tflops for g in self.groups)
+        return num / den
+
+    def link_gbps(self, ga: int, gb: int, transport: str = "gpu") -> float:
+        """Effective Gb/s between node groups (indices into .groups)."""
+        if ga == gb:
+            return self.ib_gbps * self.ib_eff
+        if transport == "cpu":
+            # CPU-staged: PCIe copy out + ethernet + PCIe copy in (serial)
+            eth = self.eth_gbps * self.eth_eff
+            inv = 2.0 / self.pcie_gbps + 1.0 / eth
+            return 1.0 / inv
+        return self.eth_gbps * self.eth_eff
+
+
+# ----------------------------------------------------------- paper presets --
+# Peaks are equal across vendors in the paper's MFU algebra (Fig.7 checks out
+# only under equal peaks); measured homogeneous MFUs from §4.4.2.
+NVIDIA = DeviceType("nvidia", peak_tflops=989.0, mfu=0.564)
+GPU_A = DeviceType("gpu-a", peak_tflops=989.0, mfu=0.453)
+GPU_B = DeviceType("gpu-b", peak_tflops=989.0, mfu=0.288)
+GPU_C = DeviceType("gpu-c", peak_tflops=989.0, mfu=0.353)
+AMD = DeviceType("amd", peak_tflops=989.0, mfu=0.389)
+
+# TPU v5e preset for the JAX runtime roofline (target hardware)
+TPU_V5E = DeviceType("tpu-v5e", peak_tflops=197.0, mfu=0.55,
+                     hbm_gb=16.0, hbm_gbps=819.0)
+
+
+def paper_hetero_cluster(n_amd_nodes: int = 16, n_a_nodes: int = 80,
+                         amd: DeviceType = AMD,
+                         other: DeviceType = GPU_A) -> ClusterSpec:
+    """The paper's 1:5 AMD:GPU-A heterogeneous cluster (96N768D default)."""
+    return ClusterSpec(groups=(NodeGroup(amd, n_amd_nodes),
+                               NodeGroup(other, n_a_nodes)))
+
+
+def paper_cluster_of_size(n_nodes: int) -> ClusterSpec:
+    """12N96D / 24N192D / 48N384D / 96N768D from §4.1 (ratio 1:5)."""
+    assert n_nodes % 6 == 0, "paper clusters keep AMD:A = 1:5"
+    return paper_hetero_cluster(n_nodes // 6, n_nodes - n_nodes // 6)
+
+
+def homogeneous_cluster(dev: DeviceType, n_nodes: int) -> ClusterSpec:
+    return ClusterSpec(groups=(NodeGroup(dev, n_nodes),))
+
+
+def tpu_multipod_cluster(n_pods: int = 2, chips_per_pod: int = 256,
+                         pod_mfus: Optional[List[float]] = None
+                         ) -> ClusterSpec:
+    """TPU adaptation: pods are the 'heterogeneous' islands (DESIGN.md §2).
+    Different pod_mfus model mixed generations / degraded pods."""
+    mfus = pod_mfus or [TPU_V5E.mfu] * n_pods
+    groups = tuple(
+        NodeGroup(dataclasses.replace(TPU_V5E, name=f"tpu-pod{i}",
+                                      mfu=mfus[i]),
+                  n_nodes=chips_per_pod // 4, accel_per_node=4)
+        for i in range(n_pods))
+    # ICI ~ 50 GB/s/link = 400 Gb/s; DCN between pods ~ 25 GB/s = 200 Gb/s
+    return ClusterSpec(groups=groups, ib_gbps=400.0, ib_eff=0.9,
+                       eth_gbps=200.0, eth_eff=0.8)

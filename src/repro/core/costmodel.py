@@ -1,0 +1,108 @@
+"""Per-layer/per-stage analytic cost model — the 'automatic profiling' input
+to the distributed performance predictor (paper §3.2).
+
+On the real system these weights come from profiling a small sample cluster;
+here they are derived analytically from ModelConfig (and can be calibrated
+from the dry-run's compiled cost_analysis via ``calibrate()``).
+
+All times in seconds, sizes in bytes, rates given in Gb/s (networks) or
+TFLOP/s (compute).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.models.config import ModelConfig
+
+BYTES_ACT = 2  # bf16 activations
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCost:
+    flops_fwd: float      # per token
+    param_bytes: float
+    act_bytes_per_token: float  # stored activations (1F1B in-flight memory)
+
+
+def layer_cost(cfg: ModelConfig, seq_len: int) -> LayerCost:
+    """Cost of ONE transformer layer (mean over kinds for hybrid)."""
+    D, F = cfg.d_model, cfg.d_ff
+    H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    kinds = cfg.layer_kinds()
+
+    def one(kind: str):
+        if kind == "attn":
+            proj = 2.0 * D * (H * hd + 2 * Hk * hd + H * hd)
+            kv = min(seq_len, cfg.window) if cfg.window else seq_len
+            attn = 2.0 * 2 * H * hd * kv
+            mats = 3 if cfg.act in ("swiglu", "geglu") else 2
+            act_e = cfg.top_k if cfg.n_experts else 1
+            mlp = 2.0 * mats * D * F * act_e * (cfg.capacity_factor
+                                                if cfg.n_experts else 1.0)
+            params = (D * (H + 2 * Hk) * hd + H * hd * D
+                      + mats * D * F * (cfg.n_experts or 1))
+            acts = (D * 4 + F * act_e)
+        elif kind == "ssm":
+            di, ds, dr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank_
+            mm = 2.0 * (D * 2 * di + di * (dr + 2 * ds) + dr * di + di * D)
+            scan = 10.0 * di * ds
+            mlp = 0.0
+            params = (D * 2 * di + di * (dr + 2 * ds) + dr * di + di * ds
+                      + di * D)
+            acts = di * 6
+            return mm + scan, params, acts
+        else:  # rec
+            W = cfg.lru_width_
+            mm = 2.0 * (2 * D * W + 2 * W * W + W * D)
+            mats = 3 if cfg.act in ("swiglu", "geglu") else 2
+            mlp = 2.0 * mats * D * F
+            params = 2 * D * W + 2 * W * W + W * D + mats * D * F
+            acts = W * 5 + D * 2
+            return mm + mlp + 10.0 * W, params, acts
+        return proj + attn + mlp, params, acts
+
+    tot_f = tot_p = tot_a = 0.0
+    for k in kinds:
+        f, p, a = one(k)
+        tot_f += f
+        tot_p += p
+        tot_a += a
+    n = len(kinds)
+    return LayerCost(flops_fwd=tot_f / n,
+                     param_bytes=BYTES_ACT * tot_p / n,
+                     act_bytes_per_token=BYTES_ACT * tot_a / n)
+
+
+def embedding_flops(cfg: ModelConfig) -> float:
+    """Unembedding matmul per token (embedding gather ~ free)."""
+    return 2.0 * cfg.d_model * cfg.vocab_size
+
+
+@dataclasses.dataclass(frozen=True)
+class CommVolume:
+    """Per-microbatch communication volumes in bytes."""
+    pp_p2p: float        # inter-stage activation send (paper Eq.3)
+    tp_per_layer: float  # all-reduce volume per layer (2x fwd, 2x bwd)
+    dp_grads: float      # gradient all-reduce bytes per step per replica
+
+
+def comm_volume(cfg: ModelConfig, micro_bs: int, seq_len: int,
+                layers_in_stage: int, dp: int) -> CommVolume:
+    D = cfg.d_model
+    pp = float(micro_bs * seq_len * D * 2)  # paper Eq.3: B*L*H*2 (bytes, bf16)
+    tp = float(micro_bs * seq_len * D * 2)  # bf16 activation all-reduce volume
+    lc = layer_cost(cfg, seq_len)
+    grads = lc.param_bytes * layers_in_stage * 2 * (dp - 1) / max(dp, 1)
+    return CommVolume(pp_p2p=pp, tp_per_layer=tp, dp_grads=grads)
+
+
+def calibrate(cfg: ModelConfig, seq_len: int,
+              hlo_flops_per_token: Optional[float] = None) -> float:
+    """Measured-vs-analytic FLOPs ratio from the dry-run cost analysis
+    (remat/redundancy factor); multiply stage compute times by this."""
+    if not hlo_flops_per_token:
+        return 1.0
+    analytic = (layer_cost(cfg, seq_len).flops_fwd * cfg.num_layers
+                + embedding_flops(cfg)) * 3.0  # fwd+bwd
+    return max(hlo_flops_per_token / analytic, 1.0)

@@ -1,0 +1,76 @@
+"""Distributed training plan: the output of the automatic parallel planner.
+
+Level 1 (pipeline stages across heterogeneous groups) is non-uniform; levels
+2/3 (DP / TP inside homogeneous groups) are uniform — paper §3.3's search
+tree shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class StagePlacement:
+    group: int         # index into ClusterSpec.groups
+    n_layers: int
+    dp: int            # data-parallel replicas of this stage
+    tp: int            # tensor-parallel width inside a node
+    is_last: bool = False
+
+    @property
+    def n_accel(self) -> int:
+        return self.dp * self.tp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelPlan:
+    """``micro_bs`` is the per-replica microbatch size at stage 0.  Stages may
+    have different DP degrees (heterogeneous groups); each stage's microbatch
+    size is scaled so every stage consumes the same sequences per pipeline
+    tick: mbs_i = tokens_per_tick / dp_i."""
+    stages: Tuple[StagePlacement, ...]
+    micro_bs: int
+    global_batch: int
+    seq_len: int
+    transport: str = "gpu"   # iccl transport across the hetero boundary
+
+    @property
+    def pp(self) -> int:
+        return len(self.stages)
+
+    @property
+    def dp(self) -> int:
+        return self.stages[0].dp
+
+    @property
+    def tokens_per_tick(self) -> int:
+        """Sequences entering the pipeline per tick.  lcm over stage DP
+        degrees so every stage's microbatch size is a whole number even when
+        heterogeneous groups carry different DP."""
+        import math
+        l = 1
+        for s in self.stages:
+            l = math.lcm(l, s.dp)
+        return self.micro_bs * l
+
+    def stage_micro_bs(self, i: int) -> int:
+        return max(1, self.tokens_per_tick // self.stages[i].dp)
+
+    @property
+    def micro_batches(self) -> int:
+        return max(1, self.global_batch // self.tokens_per_tick)
+
+    @property
+    def n_accel(self) -> int:
+        return sum(s.n_accel for s in self.stages)
+
+    @property
+    def layers(self) -> Tuple[int, ...]:
+        return tuple(s.n_layers for s in self.stages)
+
+    def describe(self) -> str:
+        seg = "".join(str(s.n_layers) for s in self.stages) \
+            if max(self.layers) < 10 else "-".join(map(str, self.layers))
+        return (f"pp={self.pp} tp={self.stages[0].tp} dp={self.dp} "
+                f"mbs={self.micro_bs} m={self.micro_batches} seg={seg}")

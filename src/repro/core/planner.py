@@ -1,0 +1,152 @@
+"""Automatic parallel planner (paper §3.3).
+
+Three-level search tree, DFS-traversed:
+  level 1: pipeline degree PP + contiguous assignment of stages to node
+           groups + (non-)uniform layer segmentation   [heterogeneous]
+  level 2: uniform DP inside each homogeneous group    [homogeneous nodes]
+  level 3: uniform TP inside a node                    [accelerators]
+
+Rules guiding the DFS (paper):
+  1. load balance — layers ∝ per-stage effective speed, then greedy
+     rebalancing against the simulated per-stage times;
+  2. minimum end-to-end time — every leaf is scored by the distributed
+     performance predictor (workload simulator), lowest wins.
+
+The planner doubles as the fault-tolerance brain: on node loss, re-run
+``search`` on the surviving ClusterSpec and reshard (train/trainer.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+from repro.core import segmentation
+from repro.core.cluster import ClusterSpec
+from repro.core.plan import ParallelPlan, StagePlacement
+from repro.core.predictor import PerformancePredictor, Prediction
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class PlannerResult:
+    plan: ParallelPlan
+    prediction: Prediction
+    evaluated: int
+    log: Tuple[Tuple[str, float], ...]  # (plan description, iter_time)
+
+
+def _stage_groups(cluster: ClusterSpec, pp: int) -> Optional[List[int]]:
+    """Contiguously assign pp stages to groups ∝ accelerator counts.
+    Returns group index per stage, or None if a group would get 0 stages
+    or a non-integer accelerator share."""
+    total = cluster.n_accel
+    counts = []
+    for g in cluster.groups:
+        c = round(pp * g.n_accel / total)
+        counts.append(c)
+    # fix rounding to sum exactly pp
+    while sum(counts) > pp:
+        counts[counts.index(max(counts))] -= 1
+    while sum(counts) < pp:
+        counts[counts.index(min(counts))] += 1
+    if any(c <= 0 for c in counts):
+        return None
+    out: List[int] = []
+    for gi, c in enumerate(counts):
+        out += [gi] * c
+    return out
+
+
+def _candidate_pps(cluster: ClusterSpec, n_layers: int,
+                   pp_options: Optional[Sequence[int]]) -> Iterable[int]:
+    if pp_options:
+        return [p for p in pp_options if p <= n_layers]
+    ng = len(cluster.groups)
+    base = max(ng, 2)
+    opts = {p for p in (2, 4, 6, 8, 10, 12, 16, 20, 24, 32)
+            if base <= p <= n_layers}
+    return sorted(opts)
+
+
+def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
+           seq_len: int, pp_options: Optional[Sequence[int]] = None,
+           tp_options: Sequence[int] = (1, 2, 4, 8),
+           micro_bs_options: Sequence[int] = (1, 2),
+           nonuniform: bool = True, schedule: str = "1f1b",
+           calibration: float = 1.0, require_fit: bool = True,
+           include_tp_comm: bool = True) -> PlannerResult:
+    """DFS over the three-level tree; returns the min-iter-time plan."""
+    pred = PerformancePredictor(cluster, cfg, calibration,
+                                include_tp_comm=include_tp_comm)
+    best: Optional[Tuple[Prediction, ParallelPlan]] = None
+    log: List[Tuple[str, float]] = []
+    evaluated = 0
+
+    for pp in _candidate_pps(cluster, cfg.num_layers, pp_options):   # level 1
+        groups = _stage_groups(cluster, pp)
+        if groups is None:
+            continue
+        n_stages_in_group = [groups.count(gi)
+                             for gi in range(len(cluster.groups))]
+        for tp in tp_options:                                        # level 3
+            if any(g.accel_per_node % tp for g in cluster.groups):
+                continue
+            # level 2: uniform DP inside each group (groups may differ:
+            # microbatch sizes scale so token flow stays 1:1 per tick)
+            dp_g = []
+            ok = True
+            for gi, g in enumerate(cluster.groups):
+                denom = tp * n_stages_in_group[gi]
+                if g.n_accel % denom:
+                    ok = False
+                    break
+                dp_g.append(g.n_accel // denom)
+            if not ok:
+                continue
+            for micro_bs in micro_bs_options:
+                import math
+                l = 1
+                for d in dp_g:
+                    l = math.lcm(l, d)
+                tick = micro_bs * l
+                if global_batch % tick:
+                    continue
+
+                def eval_split(split: List[int], tag: str):
+                    nonlocal best, evaluated
+                    stages = tuple(
+                        StagePlacement(group=groups[i], n_layers=split[i],
+                                       dp=dp_g[groups[i]], tp=tp,
+                                       is_last=(i == pp - 1))
+                        for i in range(pp))
+                    plan = ParallelPlan(stages=stages, micro_bs=micro_bs,
+                                        global_batch=global_batch,
+                                        seq_len=seq_len)
+                    p = pred.predict(plan, schedule=schedule)
+                    evaluated += 1
+                    log.append((f"{tag} {plan.describe()}", p.iter_time))
+                    if require_fit and not p.fits:
+                        return
+                    if best is None or p.iter_time < best[0].iter_time:
+                        best = (p, plan)
+
+                eval_split(segmentation.uniform_split(cfg.num_layers, pp),
+                           "uniform")
+                if nonuniform:
+                    # per-stage speed = dp * per-accel effective TFLOPs
+                    # (stage microbatch shrinks with dp, so both count)
+                    speeds = [dp_g[groups[i]]
+                              * cluster.groups[groups[i]].device.effective_tflops
+                              for i in range(pp)]
+                    split = segmentation.nonuniform_split(cfg.num_layers,
+                                                          speeds)
+                    # rule 1 refinement against simulated per-layer times
+                    per_layer_t = [1.0 / s for s in speeds]
+                    split = segmentation.rebalance(
+                        split, [t * l for t, l in zip(per_layer_t, split)])
+                    eval_split(split, "nonuniform")
+
+    if best is None:
+        raise RuntimeError("planner found no feasible plan (memory/divisibility)")
+    return PlannerResult(plan=best[1], prediction=best[0],
+                         evaluated=evaluated, log=tuple(log))

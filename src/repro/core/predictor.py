@@ -1,0 +1,125 @@
+"""Distributed performance predictor (paper §3.2).
+
+Combines the analytic/profiled cost model with the ICCL transport models and
+the workload simulator to predict iteration time, throughput (Eq.1 TGS),
+MFU (Eq.2) and peak memory for a candidate ParallelPlan on a ClusterSpec —
+without touching the cluster.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+from repro.core import costmodel, simulator
+from repro.core.cluster import ClusterSpec
+from repro.core.plan import ParallelPlan
+from repro.models.config import ModelConfig
+
+GBPS = 1e9 / 8.0  # Gb/s -> bytes/s
+
+
+@dataclasses.dataclass(frozen=True)
+class Prediction:
+    iter_time: float
+    tgs: float                 # tokens / accelerator / second (paper Eq.1)
+    mfu: float                 # paper Eq.2 against mean peak TFLOPs
+    theoretical_mfu: float     # cluster upper bound (Fig.7 definition)
+    bubble_frac: float
+    stage_times_fwd: Tuple[float, ...]
+    peak_mem_gb: Tuple[float, ...]
+    fits: bool
+
+    @property
+    def mfu_of_bound(self) -> float:
+        return self.mfu / self.theoretical_mfu
+
+
+class PerformancePredictor:
+    """include_tp_comm=False when DeviceType.mfu is calibrated from
+    *achieved* homogeneous throughput (paper Fig.6/7/8): the measured MFU
+    already absorbs intra-node TP overhead, so the simulator only adds the
+    overheads heterogeneity introduces (bubble, inter-stage P2P, DP)."""
+
+    def __init__(self, cluster: ClusterSpec, cfg: ModelConfig,
+                 calibration: float = 1.0, include_tp_comm: bool = True):
+        self.cluster = cluster
+        self.cfg = cfg
+        self.calibration = calibration
+        self.include_tp_comm = include_tp_comm
+
+    # ---------------------------------------------------------- pieces ----
+    def stage_timing(self, plan: ParallelPlan, i: int) -> simulator.StageTiming:
+        st = plan.stages[i]
+        g = self.cluster.groups[st.group]
+        mbs = plan.stage_micro_bs(i)
+        lc = costmodel.layer_cost(self.cfg, plan.seq_len)
+        tokens = mbs * plan.seq_len
+        flops = lc.flops_fwd * st.n_layers * tokens
+        if st.is_last:
+            flops += costmodel.embedding_flops(self.cfg) * tokens
+        eff = g.device.effective_tflops * 1e12 * st.tp
+        t_fwd = self.calibration * flops / eff
+        # TP all-reduce: 2 per layer fwd, ring factor 2(tp-1)/tp, NVLink-class
+        if st.tp > 1 and self.include_tp_comm:
+            vol = costmodel.comm_volume(self.cfg, mbs, plan.seq_len,
+                                        st.n_layers, st.dp).tp_per_layer
+            ring = 2.0 * (st.tp - 1) / st.tp
+            t_fwd += st.n_layers * 2 * vol * ring / (g.intra_node_gbps * GBPS)
+        t_bwd = 2.0 * t_fwd
+        # P2P send to next stage (paper Eq.3 volume over the boundary link)
+        if i + 1 < plan.pp:
+            nxt = plan.stages[i + 1]
+            bw = self.cluster.link_gbps(st.group, nxt.group, plan.transport)
+            vol = costmodel.comm_volume(self.cfg, mbs, plan.seq_len,
+                                        st.n_layers, st.dp).pp_p2p
+            send = vol / (bw * GBPS)
+        else:
+            send = 0.0
+        return simulator.StageTiming(fwd=t_fwd, bwd=t_bwd, send=send)
+
+    def dp_allreduce_time(self, plan: ParallelPlan) -> float:
+        if plan.dp <= 1:
+            return 0.0
+        times = []
+        lc = costmodel.layer_cost(self.cfg, plan.seq_len)
+        for st in plan.stages:
+            vol = (lc.param_bytes * st.n_layers / st.tp) \
+                * 2.0 * (st.dp - 1) / st.dp
+            times.append(vol / (self.cluster.ib_gbps * self.cluster.ib_eff
+                                * GBPS))
+        return max(times)
+
+    def peak_memory(self, plan: ParallelPlan) -> Tuple[float, ...]:
+        lc = costmodel.layer_cost(self.cfg, plan.seq_len)
+        out = []
+        for i, st in enumerate(plan.stages):
+            params = lc.param_bytes * st.n_layers / st.tp
+            opt = params * (6.0 + 2.0 / st.dp)  # fp32 master+m+v ZeRO-1-ish
+            n_mb = simulator.peak_activation_microbatches(i, plan.pp,
+                                                          plan.micro_batches)
+            acts = (lc.act_bytes_per_token * plan.stage_micro_bs(i)
+                    * plan.seq_len * st.n_layers / st.tp) * n_mb
+            out.append((params + opt + acts) / 1e9)
+        return tuple(out)
+
+    # ----------------------------------------------------------- predict --
+    def predict(self, plan: ParallelPlan, schedule: str = "1f1b",
+                overlap_dp: bool = True) -> Prediction:
+        timings = [self.stage_timing(plan, i) for i in range(plan.pp)]
+        rep = simulator.simulate(timings, plan.micro_batches, schedule,
+                                 dp_allreduce=self.dp_allreduce_time(plan),
+                                 overlap_dp=overlap_dp)
+        S = plan.n_accel
+        tokens = plan.global_batch * plan.seq_len
+        tgs = tokens / (S * rep.iter_time)               # Eq.1
+        model_flops = self.cfg.flops_per_token(plan.seq_len) * 3.0  # fwd+bwd
+        tested_tflops = tokens * model_flops / (rep.iter_time * S) / 1e12
+        mfu = tested_tflops / self.cluster.peak_tflops_mean   # Eq.2
+        mems = self.peak_memory(plan)
+        fits = all(m < self.cluster.groups[st.group].device.hbm_gb
+                   for m, st in zip(mems, plan.stages))
+        return Prediction(iter_time=rep.iter_time, tgs=tgs, mfu=mfu,
+                          theoretical_mfu=self.cluster.theoretical_mfu,
+                          bubble_frac=rep.bubble_frac,
+                          stage_times_fwd=tuple(t.fwd for t in timings),
+                          peak_mem_gb=mems, fits=fits)

@@ -1,0 +1,60 @@
+"""Pipeline stage segmentation: uniform vs non-uniform (paper's rule 1).
+
+Non-uniform segmentation assigns layers proportionally to each stage's
+*compute speed* (accelerators-per-stage x per-accelerator effective TFLOPs),
+so faster stages hold more layers — e.g. the paper's `766667777777` split of
+80 layers over PP=12 on the AMD+C cluster.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+
+def uniform_split(n_layers: int, pp: int) -> List[int]:
+    base, rem = divmod(n_layers, pp)
+    return [base + (1 if i < rem else 0) for i in range(pp)]
+
+
+def nonuniform_split(n_layers: int, speeds: Sequence[float]) -> List[int]:
+    """Largest-remainder apportionment of layers ∝ stage speed, min 1."""
+    pp = len(speeds)
+    assert n_layers >= pp
+    tot = float(sum(speeds))
+    quota = [n_layers * s / tot for s in speeds]
+    base = [max(1, int(q)) for q in quota]
+    # fix overflow caused by the min-1 floor: shrink the most over-quota
+    # stage that still has layers to give
+    while sum(base) > n_layers:
+        cands = [j for j in range(pp) if base[j] > 1]
+        if not cands:  # pragma: no cover - pp > n_layers, guarded above
+            break
+        i = max(cands, key=lambda j: base[j] - quota[j])
+        base[i] -= 1
+    rem = n_layers - sum(base)
+    order = sorted(range(pp), key=lambda i: quota[i] - base[i], reverse=True)
+    for i in range(rem):
+        base[order[i % pp]] += 1
+    return base
+
+
+def rebalance(split: List[int], stage_times: Sequence[float],
+              max_moves: int = 64) -> List[int]:
+    """Greedy load-balance refinement (rule 1): move one layer at a time from
+    the slowest-per-layer-normalized max stage to the min stage while the
+    bottleneck improves.  ``stage_times`` are per-layer-proportional times."""
+    split = list(split)
+    per_layer = [t / max(l, 1) for t, l in zip(stage_times, split)]
+    for _ in range(max_moves):
+        times = [p * l for p, l in zip(per_layer, split)]
+        hi = max(range(len(split)), key=lambda i: times[i])
+        lo = min(range(len(split)), key=lambda i: times[i])
+        if split[hi] <= 1:
+            break
+        new_hi = per_layer[hi] * (split[hi] - 1)
+        new_lo = per_layer[lo] * (split[lo] + 1)
+        if max(new_hi, new_lo, *(times[i] for i in range(len(split))
+                                 if i not in (hi, lo))) >= times[hi]:
+            break
+        split[hi] -= 1
+        split[lo] += 1
+    return split

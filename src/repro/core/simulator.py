@@ -1,0 +1,139 @@
+"""Workload simulator (paper §3.2): replays a candidate plan through an exact
+pipeline schedule and reports iteration time + peak memory.
+
+Schedules:
+  * ``1f1b``        strict PipeDream-1F1B op order (paper's data constraint);
+                    P2P transfer time sits on the critical path.
+  * ``1f1b-eager``  1F1B with compute/comm overlap: a stage may run its next
+                    ready forward while a backward is still in flight, with
+                    the in-flight count capped at (pp - stage) + slack.  This
+                    models async iSend/iRecv (ICCL) overlap and is required
+                    to reach the paper's 97.5%-of-bound numbers when the
+                    heterogeneous-boundary link is slow.
+  * ``gpipe``       all forwards then all backwards (memory-hungry baseline).
+
+The simulation is greedy event-driven list scheduling over the op DAG and is
+exact for the given per-op times.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class StageTiming:
+    fwd: float           # seconds per microbatch forward
+    bwd: float           # seconds per microbatch backward
+    send: float          # seconds to transfer activations stage i -> i+1
+
+
+@dataclasses.dataclass(frozen=True)
+class SimReport:
+    iter_time: float
+    stage_busy: Tuple[float, ...]
+    bubble_frac: float
+    schedule: str
+
+
+def simulate(timings: Sequence[StageTiming], m: int,
+             schedule: str = "1f1b-eager", dp_allreduce: float = 0.0,
+             overlap_dp: bool = True, eager_slack: int = 2) -> SimReport:
+    pp = len(timings)
+    finish_f: List[List[Optional[float]]] = [[None] * m for _ in range(pp)]
+    finish_b: List[List[Optional[float]]] = [[None] * m for _ in range(pp)]
+    nf = [0] * pp            # next forward / backward microbatch index
+    nb = [0] * pp
+    free = [0.0] * pp
+
+    def f_dep(i: int, j: int) -> Optional[float]:
+        if i == 0:
+            return 0.0
+        t = finish_f[i - 1][j]
+        return None if t is None else t + timings[i - 1].send
+
+    def b_dep(i: int, j: int) -> Optional[float]:
+        if i == pp - 1:
+            return finish_f[i][j]
+        t = finish_b[i + 1][j]
+        return None if t is None else t + timings[i].send
+
+    def cap(i: int) -> int:
+        if schedule == "gpipe":
+            return m
+        base = min(m, pp - i)
+        return base + (eager_slack if schedule == "1f1b-eager" else 0)
+
+    def strict_next_is_f(i: int) -> bool:
+        """Strict 1F1B order: warmup forwards then alternate F,B then drain."""
+        if schedule == "gpipe":
+            return nf[i] < m
+        w = min(m, pp - i - 1)
+        if nf[i] < w:
+            return True
+        if nf[i] >= m:
+            return False
+        # steady state: F_{w+k} precedes B_k
+        return nf[i] - w == nb[i]
+
+    total = 2 * m * pp
+    done = 0
+    while done < total:
+        best = None  # (start, kind, stage)
+        for i in range(pp):
+            cand = []
+            f_ok = nf[i] < m and (nf[i] - nb[i]) < cap(i)
+            b_ok = nb[i] < m and nb[i] < nf[i] if i == pp - 1 else nb[i] < m
+            if schedule in ("1f1b", "gpipe"):
+                if strict_next_is_f(i):
+                    b_ok = False
+                else:
+                    f_ok = False
+            if b_ok:
+                d = b_dep(i, nb[i])
+                if d is not None:
+                    cand.append((max(free[i], d), "B"))
+            if f_ok:
+                d = f_dep(i, nf[i])
+                if d is not None:
+                    cand.append((max(free[i], d), "F"))
+            if not cand:
+                continue
+            # prefer earlier start; tie-break backward (memory pressure)
+            cand.sort(key=lambda c: (c[0], c[1] != "B"))
+            s, kind = cand[0]
+            if best is None or s < best[0]:
+                best = (s, kind, i)
+        assert best is not None, "schedule deadlocked (dependency bug)"
+        s, kind, i = best
+        if kind == "F":
+            finish_f[i][nf[i]] = s + timings[i].fwd
+            free[i] = finish_f[i][nf[i]]
+            nf[i] += 1
+        else:
+            finish_b[i][nb[i]] = s + timings[i].bwd
+            free[i] = finish_b[i][nb[i]]
+            nb[i] += 1
+        done += 1
+
+    end = max(max(r) for r in finish_b)
+    busy = tuple(m * (t.fwd + t.bwd) for t in timings)
+    if dp_allreduce > 0.0:
+        if overlap_dp:
+            last_b = [finish_b[i][m - 1] for i in range(pp)]
+            end = max(end, max(lb + dp_allreduce for lb in last_b))
+        else:
+            end += dp_allreduce
+    bubble = 1.0 - sum(b / end for b in busy) / pp
+    return SimReport(iter_time=end, stage_busy=busy, bubble_frac=bubble,
+                     schedule=schedule)
+
+
+def peak_activation_microbatches(stage: int, pp: int, m: int,
+                                 schedule: str = "1f1b",
+                                 eager_slack: int = 2) -> int:
+    """Peak in-flight microbatches (activation memory) at a stage."""
+    if schedule == "gpipe":
+        return m
+    base = min(m, pp - stage)
+    return base + (eager_slack if schedule == "1f1b-eager" else 0)

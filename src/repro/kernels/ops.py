@@ -1,0 +1,62 @@
+"""jit'd dispatch wrappers: Pallas kernel on TPU, jnp oracle elsewhere.
+
+``backend()`` resolves once per call site:
+  * "pallas"     — compiled Pallas (real TPU)
+  * "interpret"  — Pallas interpret=True (CPU correctness, slow)
+  * "ref"        — pure-jnp oracle (default on CPU; XLA fuses it)
+Set REPRO_KERNELS=pallas|interpret|ref to force.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import ref, rmsnorm as rn, ssm_scan as ss, swiglu as sg
+
+
+def backend() -> str:
+    forced = os.environ.get("REPRO_KERNELS")
+    if forced:
+        return forced
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap"))
+def flash_attention(q, k, v, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None):
+    be = backend()
+    if be == "ref":
+        return ref.flash_attention_ref(q, k, v, causal=causal,
+                                       window=window, softcap=softcap)
+    return fa.flash_attention(q, k, v, causal=causal, window=window,
+                              softcap=softcap,
+                              interpret=(be == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def rmsnorm(x, scale, eps: float = 1e-5):
+    be = backend()
+    if be == "ref":
+        return ref.rmsnorm_ref(x, scale, eps)
+    return rn.rmsnorm(x, scale, eps, interpret=(be == "interpret"))
+
+
+@jax.jit
+def ssm_scan(u, dt, Bc, Cc, A):
+    be = backend()
+    if be == "ref":
+        return ref.ssm_scan_ref(u, dt, Bc, Cc, A)
+    return ss.ssm_scan(u, dt, Bc, Cc, A, interpret=(be == "interpret"))
+
+
+@jax.jit
+def swiglu(g, u):
+    be = backend()
+    if be == "ref":
+        return ref.swiglu_ref(g, u)
+    return sg.swiglu(g, u, interpret=(be == "interpret"))

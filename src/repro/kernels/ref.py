@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+These are also the implementations the models use on CPU / in the dry-run —
+XLA fuses them; the Pallas kernels are the TPU-target fast path selected via
+ops.use_pallas().
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None) -> jax.Array:
+    """q: (B,Sq,H,hd); k/v: (B,Sk,Hk,hd) with H % Hk == 0 (GQA).
+    Returns (B,Sq,H,hd).  Positions are aligned at the END (decode-style
+    offset) when Sq != Sk: q position i corresponds to Sk - Sq + i."""
+    B, Sq, H, hd = q.shape
+    Sk, Hk = k.shape[1], k.shape[2]
+    G = H // Hk
+    qg = q.reshape(B, Sq, Hk, G, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(Sq) + (Sk - Sq)
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None] > qpos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssm_scan_ref(u, dt, Bc, Cc, A) -> jax.Array:
+    """Selective-scan oracle (diagonal A).  u,dt: (B,S,di); Bc,Cc: (B,S,ds);
+    A: (di,ds).  Returns y: (B,S,di) fp32 (no D skip / gate — callers add)."""
+    Bsz, S, di = u.shape
+    ds = Bc.shape[-1]
+
+    def step(h, xs):
+        u_t, dt_t, B_t, C_t = xs
+        decay = jnp.exp(dt_t[..., None] * A[None])          # (B,di,ds)
+        h = decay * h + (dt_t * u_t)[..., None] * B_t[:, None, :]
+        y = jnp.sum(h * C_t[:, None, :], axis=-1)
+        return h, y
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+               for a in (u, dt, Bc, Cc))
+    h0 = jnp.zeros((Bsz, di, ds), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1)
+
+
+def swiglu_ref(g, u) -> jax.Array:
+    return (jax.nn.silu(g.astype(jnp.float32))
+            * u.astype(jnp.float32)).astype(g.dtype)

@@ -1,0 +1,30 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  Single-pod: (16, 16) ("data", "model") = 256 chips.
+Multi-pod: (2, 16, 16) ("pod", "data", "model") = 512 chips — the ``pod``
+axis is HETHUB's heterogeneous boundary (pipeline stages / slow links).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 1, n_model: int = 1, n_pod: int = 0):
+    """Tiny mesh over however many (CPU) devices exist — for tests."""
+    if n_pod:
+        return jax.make_mesh((n_pod, n_data, n_model),
+                             ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (≈ per-chip usable)

@@ -1,0 +1,165 @@
+"""Model configuration for every architecture family in the zoo.
+
+One dataclass covers dense / MoE / SSM / hybrid / enc-dec / VLM backbones so the
+HETHUB planner, sharding rules and launch layer can treat all architectures
+uniformly (the planner only consumes per-layer costs derived from these dims).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+
+    # --- attention options ---
+    qk_norm: bool = False
+    window: Optional[int] = None           # sliding-window size (SWA) or None
+    rope_theta: float = 10000.0
+    attn_logit_softcap: Optional[float] = None
+
+    # --- MLP ---
+    act: str = "swiglu"                    # swiglu | sq_relu | gelu | geglu
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+
+    # --- SSM (mamba-1) ---
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    dt_rank: int = 0                       # 0 -> ceil(d_model / 16)
+
+    # --- hybrid (recurrentgemma): block pattern, cycled over layers ---
+    block_pattern: Tuple[str, ...] = ()    # e.g. ("rec", "rec", "attn")
+    lru_width: int = 0                     # 0 -> d_model
+
+    # --- enc-dec (whisper) ---
+    n_encoder_layers: int = 0              # decoder layers = num_layers
+
+    # --- VLM ---
+    n_vision_tokens: int = 0               # stub frontend: precomputed embeds
+
+    # --- numerics / implementation ---
+    param_dtype: str = "bfloat16"
+    dtype: str = "bfloat16"
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    attn_chunk: int = 0                    # 0 = unchunked; else q-block size
+    remat: bool = True
+    remat_policy: str = ""          # "" = full remat; save_proj = selective
+    moe_impl: str = "gspmd"         # gspmd | shard_map (manual SP boundary)
+    loss_chunk: int = 0             # CE over seq chunks (big-vocab memory)
+    scan_layers: bool = True
+    cache_update: str = "dus"              # dus | onehot (seq-sharded caches)
+    # sequence-parallel activation constraint applied at block boundaries,
+    # e.g. (("data",), "model", None): stored scan carries shard their seq
+    # dim over TP ranks (Megatron SP) — memory-roofline lever
+    act_sharding: tuple = ()
+    # (dp_axes_tuple, tp_axis) mesh hints for layers that need explicit
+    # constraints (MoE dispatch buffers); empty = no constraints (CPU tests)
+    mesh_axes: tuple = ()
+    # constraint on x entering the LM head (FSDP: reshard batch from
+    # (data, model) back to data-only so the vocab-parallel CE stays local)
+    head_act_sharding: tuple = ()
+
+    # ---- derived ----
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def dt_rank_(self) -> int:
+        return self.dt_rank or -(-self.d_model // 16)
+
+    @property
+    def lru_width_(self) -> int:
+        return self.lru_width or self.d_model
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def adtype(self):
+        return jnp.dtype(self.dtype)
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-layer block kind, resolving the hybrid pattern."""
+        if self.family == "ssm":
+            return ("ssm",) * self.num_layers
+        if self.family == "hybrid":
+            pat = self.block_pattern or ("rec", "rec", "attn")
+            return tuple(pat[i % len(pat)] for i in range(self.num_layers))
+        return ("attn",) * self.num_layers
+
+    # ---- parameter counting (for 6*N*D roofline yardstick) ----
+    def param_count(self, active_only: bool = False) -> int:
+        D, F, V, L = self.d_model, self.d_ff, self.vocab_size, self.num_layers
+        H, Hk, hd = self.n_heads, self.n_kv_heads, self.hd
+        emb = V * D * (1 if self.tie_embeddings else 2)
+        kinds = self.layer_kinds()
+
+        def attn_p() -> int:
+            return D * H * hd + 2 * D * Hk * hd + H * hd * D
+
+        def mlp_p() -> int:
+            mats = 3 if self.act in ("swiglu", "geglu") else 2
+            if self.n_experts:
+                e = self.top_k if active_only else self.n_experts
+                return e * mats * D * F + D * self.n_experts  # + router
+            return mats * D * F
+
+        def ssm_p() -> int:
+            di, ds, dr = self.d_inner, self.ssm_state, self.dt_rank_
+            return (D * 2 * di + di * self.ssm_conv + di * (dr + 2 * ds)
+                    + dr * di + di * ds + di + di * D)
+
+        def rec_p() -> int:
+            w = self.lru_width_
+            return 2 * D * w + w * self.ssm_conv + 3 * w + w * D
+
+        total = emb
+        for k in kinds:
+            total += 2 * D  # norms
+            if k == "attn":
+                total += attn_p() + mlp_p()
+            elif k == "ssm":
+                total += ssm_p()
+            elif k == "rec":
+                total += rec_p() + mlp_p()
+        if self.family == "encdec":
+            # encoder layers: self-attn + mlp; decoder adds cross-attn
+            total += self.n_encoder_layers * (attn_p() + mlp_p() + 2 * D)
+            total += self.num_layers * (attn_p() + D)  # cross-attn + norm
+        return total
+
+    def flops_per_token(self, seq_len: int, active_only: bool = True) -> float:
+        """Model FLOPs per token (fwd): 2*N_active*1tok + attention term."""
+        n = self.param_count(active_only=active_only)
+        fl = 2.0 * n
+        # attention score/value FLOPs: 2 * 2 * H * hd * kv_len per token
+        kinds = self.layer_kinds()
+        for k in kinds:
+            if k == "attn":
+                kv = min(seq_len, self.window) if self.window else seq_len
+                fl += 2 * 2 * self.n_heads * self.hd * kv
+        return fl

@@ -1,0 +1,195 @@
+"""Whisper-style encoder-decoder backbone (whisper-tiny).
+
+Per the assignment spec the conv/audio frontend is a STUB: ``input_specs()``
+supplies precomputed frame embeddings (B, S_enc, D).  Positions are sinusoidal
+(added) instead of Whisper's learned tables so arbitrary benchmark lengths
+lower cleanly — a documented backbone simplification (DESIGN.md §4).
+
+Encoder layers: bidirectional self-attn + GELU MLP.
+Decoder layers: causal self-attn + cross-attn + GELU MLP.
+Decode caches: self-attn KV (rolling-free) + static cross KV from prefill.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import _constrain_act
+from repro.models.layers import (_he, _qkv, _sdpa, attention, decode_attention,
+                                 init_attention, init_mlp, init_rmsnorm, mlp,
+                                 rmsnorm)
+
+
+def _sinusoid(S: int, D: int, offset=0) -> jax.Array:
+    pos = jnp.arange(S, dtype=jnp.float32) + offset
+    inv = 1.0 / (10000 ** (jnp.arange(0, D, 2, dtype=jnp.float32) / D))
+    ang = pos[:, None] * inv[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _init_enc_layer(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": init_rmsnorm(cfg.d_model, cfg.pdtype),
+            "attn": init_attention(k1, cfg),
+            "ln2": init_rmsnorm(cfg.d_model, cfg.pdtype),
+            "mlp": init_mlp(k2, cfg)}
+
+
+def _init_dec_layer(key, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": init_rmsnorm(cfg.d_model, cfg.pdtype),
+            "attn": init_attention(k1, cfg),
+            "ln_x": init_rmsnorm(cfg.d_model, cfg.pdtype),
+            "xattn": init_attention(k2, cfg),
+            "ln2": init_rmsnorm(cfg.d_model, cfg.pdtype),
+            "mlp": init_mlp(k3, cfg)}
+
+
+def init_encdec(key, cfg: ModelConfig) -> dict:
+    ke, kd, kt, ko = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ke, cfg.n_encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.num_layers)
+    return {
+        "embed": _he(kt, (cfg.vocab_size, cfg.d_model), cfg.pdtype),
+        "enc_blocks": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "enc_norm": init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "dec_blocks": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "final_norm": init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "unembed": _he(ko, (cfg.d_model, cfg.vocab_size), cfg.pdtype),
+    }
+
+
+def _cross_attn(p, x, ek, ev, cfg: ModelConfig) -> jax.Array:
+    """x: (B,Sq,D) queries; ek/ev: (B,Sk,Hk,hd) from encoder output."""
+    B, Sq, _ = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    q = jnp.einsum("bsd,de->bse", x, p["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    q = q.reshape(B, Sq, H, hd)
+    mask = jnp.ones((Sq, ek.shape[1]), bool)
+    o = _sdpa(q, ek, ev, mask, cfg).reshape(B, Sq, H * hd)
+    return jnp.einsum("bse,ed->bsd", o, p["wo"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _cross_kv(p, enc_out, cfg: ModelConfig):
+    B, Sk, _ = enc_out.shape
+    Hk, hd = cfg.n_kv_heads, cfg.hd
+    k = jnp.einsum("bsd,de->bse", enc_out, p["wk"],
+                   preferred_element_type=jnp.float32).astype(enc_out.dtype)
+    v = jnp.einsum("bsd,de->bse", enc_out, p["wv"],
+                   preferred_element_type=jnp.float32).astype(enc_out.dtype)
+    return k.reshape(B, Sk, Hk, hd), v.reshape(B, Sk, Hk, hd)
+
+
+def encode(params, frames, cfg: ModelConfig) -> jax.Array:
+    """frames: (B, S_enc, D) precomputed frame embeddings (frontend stub)."""
+    x = frames.astype(cfg.adtype)
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(cfg.adtype)[None]
+
+    def body(x, p):
+        x = _constrain_act(x, cfg)
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        x = x + attention(p["attn"], h, cfg, causal=False)
+        x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def encdec_forward(params, frames, tokens, cfg: ModelConfig
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Training forward. frames: (B,S_enc,D); tokens: (B,S_dec).
+    Returns (logits (B,S_dec,V), aux=0)."""
+    enc_out = encode(params, frames, cfg)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.adtype)
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(cfg.adtype)[None]
+
+    def body(x, p):
+        x = _constrain_act(x, cfg)
+        x = x + attention(p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps), cfg)
+        ek, ev = _cross_kv(p["xattn"], enc_out, cfg)
+        x = x + _cross_attn(p["xattn"], rmsnorm(p["ln_x"], x, cfg.norm_eps),
+                            ek, ev, cfg)
+        x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"],
+                        preferred_element_type=jnp.float32)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def encdec_init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      s_enc: int) -> dict:
+    L, Hk, hd = cfg.num_layers, cfg.n_kv_heads, cfg.hd
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "kv": {"k": jnp.zeros((L, batch, max_len, Hk, hd), cfg.adtype),
+               "v": jnp.zeros((L, batch, max_len, Hk, hd), cfg.adtype)},
+        "xkv": {"k": jnp.zeros((L, batch, s_enc, Hk, hd), cfg.adtype),
+                "v": jnp.zeros((L, batch, s_enc, Hk, hd), cfg.adtype)},
+    }
+
+
+def encdec_prefill(params, frames, tokens, cfg: ModelConfig, max_len: int):
+    """Encode + decoder prefill.  Returns (last logits, cache)."""
+    B, S = tokens.shape
+    enc_out = encode(params, frames, cfg)
+    cache = encdec_init_cache(cfg, B, max_len, enc_out.shape[1])
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.adtype)
+    x = x + _sinusoid(S, cfg.d_model).astype(cfg.adtype)[None]
+
+    def body(x, p):
+        x = _constrain_act(x, cfg)
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        o, k, v = attention(p["attn"], h, cfg, return_kv=True)
+        x = x + o
+        ek, ev = _cross_kv(p["xattn"], enc_out, cfg)
+        x = x + _cross_attn(p["xattn"], rmsnorm(p["ln_x"], x, cfg.norm_eps),
+                            ek, ev, cfg)
+        x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+        return x, (k, v, ek, ev)
+
+    x, (ks, vs, eks, evs) = jax.lax.scan(body, x, params["dec_blocks"])
+    cache["kv"]["k"] = cache["kv"]["k"].at[:, :, :S].set(ks)
+    cache["kv"]["v"] = cache["kv"]["v"].at[:, :, :S].set(vs)
+    cache["xkv"] = {"k": eks, "v": evs}
+    cache["pos"] = jnp.full((), S, jnp.int32)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], params["unembed"],
+                        preferred_element_type=jnp.float32)
+    return logits[:, 0], cache
+
+
+def encdec_decode_step(params, token, cache, cfg: ModelConfig):
+    """token: (B,1).  Returns (logits (B,V), cache)."""
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], token, axis=0).astype(cfg.adtype)
+    x = x + _sinusoid(1, cfg.d_model, offset=pos).astype(cfg.adtype)[None]
+
+    def body(x, xs):
+        p, ck, cv, ek, ev = xs
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        o, ck, cv = decode_attention(p["attn"], h, ck, cv, pos, cfg)
+        x = x + o
+        x = x + _cross_attn(p["xattn"], rmsnorm(p["ln_x"], x, cfg.norm_eps),
+                            ek, ev, cfg)
+        x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+        return x, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["kv"]["k"], cache["kv"]["v"],
+                  cache["xkv"]["k"], cache["xkv"]["v"]))
+    new_cache = dict(cache)
+    new_cache["kv"] = {"k": ks, "v": vs}
+    new_cache["pos"] = pos + 1
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"],
+                        preferred_element_type=jnp.float32)
+    return logits[:, 0], new_cache

@@ -1,0 +1,96 @@
+"""RG-LRU recurrent block (recurrentgemma-9b hybrid: 2x recurrent : 1x local
+attention).  Recurrence is diagonal/per-channel:
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+    a_t = exp(-c * softplus(Lambda) * sigmoid(r_t))
+
+Parallelized over sequence with an associative scan; O(1) decode state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _he
+
+_C = 8.0
+
+
+def init_rglru_block(key, cfg: ModelConfig) -> dict:
+    D, W = cfg.d_model, cfg.lru_width_
+    ks = jax.random.split(key, 6)
+    return {
+        "in_x": _he(ks[0], (D, W), cfg.pdtype),
+        "in_gate": _he(ks[1], (D, W), cfg.pdtype),
+        "conv_w": _he(ks[2], (cfg.ssm_conv, W), cfg.pdtype, fan_in=cfg.ssm_conv),
+        "conv_b": jnp.zeros((W,), cfg.pdtype),
+        "w_input_gate": _he(ks[3], (W, W), cfg.pdtype),
+        "w_rec_gate": _he(ks[4], (W, W), cfg.pdtype),
+        "lam": jnp.full((W,), 0.65, jnp.float32),  # a ~ .9..0.99 after map
+        "out": _he(ks[5], (W, D), cfg.pdtype),
+    }
+
+
+def _gates(p, u):
+    i_g = jax.nn.sigmoid(jnp.einsum(
+        "bsw,wv->bsv", u, p["w_input_gate"],
+        preferred_element_type=jnp.float32))
+    r_g = jax.nn.sigmoid(jnp.einsum(
+        "bsw,wv->bsv", u, p["w_rec_gate"],
+        preferred_element_type=jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"])[None, None] * r_g  # (B,S,W) fp32
+    return i_g, log_a
+
+
+def rglru_scan(x, i_g, log_a):
+    """x,i_g,log_a: (B,S,W) -> (B,S,W) hidden states (fp32 math)."""
+    a2 = jnp.exp(2.0 * log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-9))
+    b = beta * i_g * x.astype(jnp.float32)
+
+    def comb(l, r):
+        (la1, b1), (la2, b2) = l, r
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+
+    _, h = jax.lax.associative_scan(comb, (log_a, b), axis=1)
+    return h
+
+
+def rglru_block(p, x, cfg: ModelConfig):
+    """x: (B,S,D) -> (B,S,D) (training / prefill)."""
+    from repro.models.mamba import _causal_conv
+    u = jnp.einsum("bsd,dw->bsw", x, p["in_x"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    gate = jnp.einsum("bsd,dw->bsw", x, p["in_gate"],
+                      preferred_element_type=jnp.float32)
+    u, _ = _causal_conv(u, p["conv_w"], p["conv_b"])
+    i_g, log_a = _gates(p, u)
+    h = rglru_scan(u, i_g, log_a)
+    y = (h * jax.nn.gelu(gate)).astype(x.dtype)
+    return jnp.einsum("bsw,wd->bsd", y, p["out"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, n_rec_layers: int) -> dict:
+    W, K = cfg.lru_width_, cfg.ssm_conv
+    return {"h": jnp.zeros((n_rec_layers, batch, W), jnp.float32),
+            "conv": jnp.zeros((n_rec_layers, batch, K - 1, W), cfg.adtype)}
+
+
+def rglru_decode(p, x, h, conv_state, cfg: ModelConfig):
+    """x: (B,1,D); h: (B,W) -> (out, h, conv_state)."""
+    from repro.models.mamba import _causal_conv
+    u = jnp.einsum("bsd,dw->bsw", x, p["in_x"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    gate = jnp.einsum("bsd,dw->bsw", x, p["in_gate"],
+                      preferred_element_type=jnp.float32)
+    u, conv_state = _causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
+    i_g, log_a = _gates(p, u)
+    a = jnp.exp(log_a[:, 0])
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-9))
+    h = a * h + beta * i_g[:, 0] * u[:, 0].astype(jnp.float32)
+    y = (h[:, None] * jax.nn.gelu(gate)).astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, p["out"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, h, conv_state

@@ -1,0 +1,254 @@
+"""Core transformer layers: norms, RoPE, GQA/MQA attention (train + cached
+decode), dense MLPs.  Pure-functional: params are plain dict pytrees.
+
+All matmuls accumulate in fp32 (``preferred_element_type``) which mirrors MXU
+behaviour on TPU; activations are cast back to ``cfg.dtype``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.models.config import ModelConfig
+
+
+def _he(key, shape, dtype, fan_in=None):
+    fan = fan_in or shape[0]
+    return (jax.random.normal(key, shape, jnp.float32)
+            * math.sqrt(1.0 / fan)).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms ----
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rope ----
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); pos: (S,) or scalar broadcastable."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = pos[..., None].astype(jnp.float32) * freqs  # (S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]  # (S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------ attention ----
+def init_attention(key, cfg: ModelConfig, d_model: Optional[int] = None) -> dict:
+    D = d_model or cfg.d_model
+    H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _he(ks[0], (D, H * hd), cfg.pdtype),
+        "wk": _he(ks[1], (D, Hk * hd), cfg.pdtype),
+        "wv": _he(ks[2], (D, Hk * hd), cfg.pdtype),
+        "wo": _he(ks[3], (H * hd, D), cfg.pdtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, cfg.pdtype)
+        p["k_norm"] = init_rmsnorm(hd, cfg.pdtype)
+    return p
+
+
+def _qkv(p, x, cfg: ModelConfig, pos):
+    B, S, _ = x.shape
+    H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,de->bse", x, p["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, Hk, hd)
+    v = v.reshape(B, S, Hk, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    # selective-remat tags: with remat_policy="save_proj" the projections
+    # are saved and only the O(S^2) score/softmax chain recomputes
+    q = checkpoint_name(q, "proj")
+    k = checkpoint_name(k, "proj")
+    v = checkpoint_name(v, "proj")
+    return q, k, v
+
+
+def _scores_mask(qpos, kpos, window, causal):
+    """(Sq, Sk) bool mask; True = attend."""
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= kpos[None, :] > qpos[:, None] - window
+    return m
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """q:(B,Sq,H,hd) k/v:(B,Sk,Hk,hd)  mask:(Sq,Sk) -> (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    Hk = k.shape[2]
+    G = H // Hk
+    qg = q.reshape(B, Sq, Hk, G, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32)
+    s *= 1.0 / math.sqrt(hd)
+    if cfg.attn_logit_softcap:
+        c = cfg.attn_logit_softcap
+        s = c * jnp.tanh(s / c)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", w, v,
+                   preferred_element_type=jnp.float32).astype(q.dtype)
+    return o.reshape(B, Sq, H, hd)
+
+
+def attention(p, x, cfg: ModelConfig, *, causal: bool = True,
+              pos_offset: int = 0, return_kv: bool = False):
+    """Full-sequence attention (train / prefill).  Optionally q-chunked to
+    bound the (B,H,Sq,Sk) score materialization (memory-roofline lever)."""
+    B, S, D = x.shape
+    pos = jnp.arange(S) + pos_offset
+    q, k, v = _qkv(p, x, cfg, pos)
+    chunk = cfg.attn_chunk
+    if not chunk or S <= chunk:
+        mask = _scores_mask(pos, pos, cfg.window, causal)
+        o = _sdpa(q, k, v, mask, cfg)
+    else:
+        n = S // chunk
+
+        def body(c, qc):
+            i, = c
+            qpos = i * chunk + jnp.arange(chunk) + pos_offset
+            mask = (pos[None, :] <= qpos[:, None]) if causal else \
+                jnp.ones((chunk, S), bool)
+            if cfg.window is not None:
+                mask &= pos[None, :] > qpos[:, None] - cfg.window
+            return (i + 1,), _sdpa(qc, k, v, mask, cfg)
+
+        qs = q.reshape(B, n, chunk, cfg.n_heads, cfg.hd).transpose(1, 0, 2, 3, 4)
+        _, os = jax.lax.scan(body, (jnp.int32(0),), qs)
+        o = os.transpose(1, 0, 2, 3, 4).reshape(B, S, cfg.n_heads, cfg.hd)
+    o = o.reshape(B, S, cfg.n_heads * cfg.hd)
+    out = jnp.einsum("bse,ed->bsd", o, p["wo"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = checkpoint_name(out, "proj")
+    if return_kv:
+        return out, k, v
+    return out
+
+
+# ----------------------------------------------------- cached decoding -----
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  n_layers: int) -> dict:
+    """Cache for the attention layers only (stacked on a leading layer dim).
+    SWA archs keep a rolling window buffer: O(window), the sub-quadratic
+    property that makes long_500k feasible."""
+    Hk, hd = cfg.n_kv_heads, cfg.hd
+    S = min(max_len, cfg.window) if cfg.window else max_len
+    shape = (n_layers, batch, S, Hk, hd)
+    return {"k": jnp.zeros(shape, cfg.adtype),
+            "v": jnp.zeros(shape, cfg.adtype)}
+
+
+def decode_attention(p, x, cache_k, cache_v, pos, cfg: ModelConfig):
+    """One-token attention against a cache.
+
+    x: (B,1,D); cache_k/v: (B,S,Hk,hd); pos: scalar int32 (current index).
+    Returns (out (B,1,D), new_k, new_v).  For SWA the cache is a rolling
+    buffer indexed mod window.
+    """
+    B = x.shape[0]
+    S = cache_k.shape[1]
+    H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q, k, v = _qkv(p, x, cfg, jnp.array([0]) + pos)
+    slot = jnp.mod(pos, S) if cfg.window else pos
+    if cfg.cache_update == "onehot":
+        # arithmetic scatter: elementwise over the (possibly TP-sharded) seq
+        # dim — no cross-shard gather under GSPMD (used for seq-sharded
+        # decode caches in the dry-run / flash-decoding path)
+        oh = (jnp.arange(S) == slot)[None, :, None, None]
+        ck = jnp.where(oh, k.astype(cache_k.dtype), cache_k)
+        cv = jnp.where(oh, v.astype(cache_v.dtype), cache_v)
+    else:
+        ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                          (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                          (0, slot, 0, 0))
+    kpos_abs = jnp.arange(S)
+    if cfg.window:
+        # rolling buffer: entry i holds absolute position with i = abs % S
+        n_wrap = (pos // S) * S
+        kabs = kpos_abs + jnp.where(kpos_abs <= jnp.mod(pos, S), n_wrap,
+                                    n_wrap - S)
+        valid = (kabs >= 0) & (kabs <= pos) & (kabs > pos - cfg.window)
+    else:
+        valid = kpos_abs <= pos
+    G = H // Hk
+    qg = q.reshape(B, 1, Hk, G, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ck,
+                   preferred_element_type=jnp.float32) / math.sqrt(hd)
+    if cfg.attn_logit_softcap:
+        c = cfg.attn_logit_softcap
+        s = c * jnp.tanh(s / c)
+    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", w, cv,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    o = o.reshape(B, 1, H * hd)
+    out = jnp.einsum("bse,ed->bsd", o, p["wo"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, ck, cv
+
+
+# ------------------------------------------------------------------ mlp ----
+def init_mlp(key, cfg: ModelConfig, d_model: Optional[int] = None,
+             d_ff: Optional[int] = None) -> dict:
+    D = d_model or cfg.d_model
+    F = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act in ("swiglu", "geglu"):
+        return {"w_gate": _he(ks[0], (D, F), cfg.pdtype),
+                "w_up": _he(ks[1], (D, F), cfg.pdtype),
+                "w_down": _he(ks[2], (F, D), cfg.pdtype)}
+    return {"w_up": _he(ks[0], (D, F), cfg.pdtype),
+            "w_down": _he(ks[1], (F, D), cfg.pdtype)}
+
+
+def mlp(p, x, cfg: ModelConfig) -> jax.Array:
+    if cfg.act in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"],
+                       preferred_element_type=jnp.float32)
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"],
+                       preferred_element_type=jnp.float32)
+        act = jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)
+        h = checkpoint_name((act * u).astype(x.dtype), "proj")
+    else:
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"],
+                       preferred_element_type=jnp.float32)
+        if cfg.act == "sq_relu":          # nemotron: squared ReLU
+            h = jnp.square(jax.nn.relu(u)).astype(x.dtype)
+        else:
+            h = jax.nn.gelu(u).astype(x.dtype)
+    h = checkpoint_name(h, "proj")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,154 @@
+"""SPMD pipeline parallelism over the ``pod`` mesh axis (HETHUB's
+heterogeneous boundary).
+
+Implementation: GSPMD-native pipelining (the praxis/GSPMD-paper pattern).
+A stage buffer (n_stages, B_tick, S, D) carries one in-flight microbatch per
+stage with the stage dim sharded over ``pod``; each tick applies
+``vmap(stage_fn)`` over the stage dim — GSPMD runs stage s on pod s — and
+``jnp.roll`` shifts activations stage->stage, lowering to collective-permute
+(ICCL iSend/iRecv) on the inter-pod links.  Pure pjit: no shard_map, fully
+differentiable (the backward pass reverse-pipelines automatically; the
+workload simulator models true 1F1B timing for planning — DESIGN.md §2).
+
+Non-uniform stage segmentation (the paper's headline mechanism): stages are
+padded to the max layer count and carry a per-(stage, layer) mask; masked
+layers are identity.  On heterogeneous hardware the planner assigns more
+real layers to faster pods.
+
+Batches arrive pre-microbatched: tokens/labels shaped (m, B_tick, S) with
+B_tick sharded over 'data' — so no resharding at the microbatch split.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import (_block_fwd, _embed_tokens, _constrain_act,
+                                      _unembed)
+from repro.models.layers import rmsnorm
+from repro.train.steps import cross_entropy, constrain, AUX_COEF
+
+
+def stack_blocks_for_stages(params: Dict[str, Any], n_stages: int,
+                            layers_per_stage: Optional[Sequence[int]] = None
+                            ) -> Dict[str, Any]:
+    """Reshape stacked layer params (L, ...) -> (n_stages, Lmax, ...) with
+    zero padding for non-uniform splits (the per-stage layer mask is static,
+    derived from ``layers_per_stage`` inside make_pp_loss_fn)."""
+    blocks = params["blocks"]
+    L = jax.tree.leaves(blocks)[0].shape[0]
+    if layers_per_stage is None:
+        assert L % n_stages == 0
+        layers_per_stage = [L // n_stages] * n_stages
+    assert sum(layers_per_stage) == L and len(layers_per_stage) == n_stages
+    lmax = max(layers_per_stage)
+
+    def restack(a):
+        pieces = []
+        off = 0
+        for ls in layers_per_stage:
+            piece = a[off:off + ls]
+            off += ls
+            if ls < lmax:
+                pad = jnp.zeros((lmax - ls,) + a.shape[1:], a.dtype)
+                piece = jnp.concatenate([piece, pad], axis=0)
+            pieces.append(piece)
+        return jnp.stack(pieces)
+
+    new = dict(params)
+    new["blocks"] = jax.tree.map(restack, blocks)
+    return new
+
+
+def pp_param_specs(specs: Dict[str, Any]) -> Dict[str, Any]:
+    """Shard the leading stage dim of block params over 'pod'; everything
+    else (embed/unembed/norms) stays replicated across pods."""
+    out = dict(specs)
+
+    def podify(s):
+        parts = tuple(s) if len(s) else (None,)
+        return P(*(("pod",) + tuple(parts[1:])))
+
+    out["blocks"] = jax.tree.map(podify, specs["blocks"])
+    return out
+
+
+def make_pp_loss_fn(cfg: ModelConfig, mesh, n_stages: int,
+                    n_microbatches: int,
+                    layers_per_stage: Optional[Sequence[int]] = None):
+    """Builds loss_fn(params, batch) running the pod-axis pipeline."""
+    kinds = cfg.layer_kinds()
+    kind = kinds[0]
+    assert len(set(kinds)) == 1, "PP requires a uniform scanned stack"
+    m = n_microbatches
+
+    if layers_per_stage is not None:
+        lmax = max(layers_per_stage)
+        mask_rows = [[i < ls for i in range(lmax)] for ls in layers_per_stage]
+    else:
+        mask_rows = None
+
+    def stage_fn(blocks, mask, x):
+        """One stage: scan its (Lmax, ...) layers; masked layers identity."""
+
+        def body(x, xs):
+            p, keep = xs
+            fn = functools.partial(_block_fwd, cfg=cfg, kind=kind)
+            if cfg.remat:
+                fn = jax.checkpoint(fn)
+            y, aux = fn(p, x)
+            y = jnp.where(keep, y, x)
+            return y, jnp.where(keep, aux, 0.0)
+
+        x, auxs = jax.lax.scan(body, x, (blocks, mask))
+        return x, jnp.sum(auxs)
+
+    buf_spec = P("pod", ("data",),
+                 "model" if cfg.act_sharding else None, None)
+
+    def loss_fn(params, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        extra = batch.get("image_embeds")
+        blocks = params["blocks"]
+        lmax_ = jax.tree.leaves(blocks)[0].shape[1]
+        if mask_rows is None:
+            mask = jnp.ones((n_stages, lmax_), bool)
+        else:
+            mask = jnp.asarray(mask_rows)
+        Bt, S = tokens.shape[1], tokens.shape[2]
+        S_tot = S + (extra.shape[2] if extra is not None else 0)
+        D = cfg.d_model
+
+        buf = jnp.zeros((n_stages, Bt, S_tot, D), cfg.adtype)
+        loss_sum = jnp.zeros((), jnp.float32)
+        aux_sum = jnp.zeros((), jnp.float32)
+
+        for t in range(m + n_stages - 1):
+            if t < m:  # inject next microbatch into stage 0
+                inject = _embed_tokens(
+                    params, tokens[t], cfg,
+                    extra[t] if extra is not None else None)
+                buf = buf.at[0].set(inject.astype(cfg.adtype))
+            buf = constrain(buf, buf_spec)
+            out, auxs = jax.vmap(stage_fn)(blocks, mask, buf)
+            j_out = t - (n_stages - 1)   # microbatch finishing this tick
+            if 0 <= j_out < m:
+                h = rmsnorm(params["final_norm"], out[-1], cfg.norm_eps)
+                logits = _unembed(params, h, cfg)
+                logits = constrain(logits, P(("data",), None, "model"))
+                loss_sum = loss_sum + cross_entropy(logits, labels[j_out])
+            valid = jnp.asarray([1.0 if 0 <= t - s < m else 0.0
+                                 for s in range(n_stages)], jnp.float32)
+            aux_sum = aux_sum + jnp.sum(auxs * valid)
+            out = constrain(out, buf_spec)
+            buf = jnp.roll(out, 1, axis=0)   # collective-permute over 'pod'
+
+        loss = loss_sum / m + AUX_COEF * (aux_sum / m)
+        return loss, {"ce": loss_sum / m, "aux": aux_sum / m}
+
+    return loss_fn

@@ -1,0 +1,162 @@
+"""Training loop with the HETHUB control plane wrapped around it:
+
+  * periodic async checkpointing (atomic, resharding-on-restore);
+  * crash/restart recovery: resume from the latest complete checkpoint,
+    data pipeline state included;
+  * straggler mitigation: per-step wall times feed an EWMA; sustained
+    degradation beyond ``straggler_factor`` triggers the replan hook with a
+    degraded ClusterSpec (the paper's profiling loop run online);
+  * elastic scaling / node failure: ``replan(new_cluster)`` re-runs the
+    automatic parallel planner on the surviving cluster, rebuilds the step,
+    and reshards the latest checkpoint onto the new layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import planner as planner_mod
+from repro.core.cluster import ClusterSpec
+from repro.core.plan import ParallelPlan
+from repro.ckpt import checkpoint as ckpt
+from repro.data.pipeline import DataState, SyntheticTokens
+from repro.models.registry import ArchBundle
+from repro.optim.adamw import AdamWConfig
+from repro.parallel.sharding import ShardingRules
+from repro.train import steps as steps_mod
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    global_batch: int = 8
+    seq_len: int = 64
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 10
+    straggler_factor: float = 1.5
+    straggler_patience: int = 5
+    tp: int = 1
+
+
+class Trainer:
+    def __init__(self, bundle: ArchBundle, mesh, cfg: TrainerConfig,
+                 cluster: Optional[ClusterSpec] = None,
+                 plan: Optional[ParallelPlan] = None,
+                 opt_cfg: Optional[AdamWConfig] = None):
+        self.bundle = bundle
+        self.mesh = mesh
+        self.cfg = cfg
+        self.cluster = cluster
+        self.plan = plan
+        self.opt_cfg = opt_cfg or AdamWConfig()
+        self.rules = ShardingRules(bundle.cfg, tp=cfg.tp,
+                                   dp_axes=("data",))
+        self.data = SyntheticTokens(
+            vocab_size=bundle.cfg.vocab_size, seq_len=cfg.seq_len,
+            global_batch=cfg.global_batch, family=bundle.cfg.family,
+            d_model=bundle.cfg.d_model,
+            n_vision_tokens=bundle.cfg.n_vision_tokens)
+        self.ckpt = ckpt.AsyncCheckpointer(cfg.ckpt_dir)
+        self._ewma: Optional[float] = None
+        self._slow = 0
+        self.replans = 0
+        self._build()
+        self._init_or_restore()
+
+    # ------------------------------------------------------------ build ---
+    def _build(self):
+        self.train_step = steps_mod.make_train_step(
+            self.bundle, self.rules, self.opt_cfg)
+        self._jit = jax.jit(self.train_step, donate_argnums=0)
+
+    def _state_shardings(self, state_sds):
+        specs = steps_mod.state_specs(
+            self.bundle, self.rules, state_sds,
+            data_size=self.mesh.shape.get("data", 1))
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs)
+
+    def _init_or_restore(self):
+        step = ckpt.latest_step(self.cfg.ckpt_dir)
+        key = jax.random.PRNGKey(0)
+        state_sds = jax.eval_shape(
+            lambda k: steps_mod.init_train_state(self.bundle, k), key)
+        shardings = self._state_shardings(state_sds)
+        if step is None:
+            with jax.set_mesh(self.mesh):
+                self.state = jax.jit(
+                    lambda k: steps_mod.init_train_state(self.bundle, k),
+                    out_shardings=shardings)(key)
+            self.step = 0
+        else:
+            self.state, extra = ckpt.restore(
+                self.cfg.ckpt_dir, step, state_sds, shardings)
+            self.data.state = DataState.from_dict(extra["data"])
+            self.step = step
+
+    # ------------------------------------------------------------- run ----
+    def _device_batch(self, np_batch):
+        def put(k, v):
+            spec = (self.rules.batch_spec() if v.ndim == 2
+                    else P(self.rules.dp_axes, None, None))
+            if v.dtype == np.float32 and k in ("frames", "image_embeds"):
+                v = v.astype(self.bundle.cfg.adtype)
+            return jax.device_put(v, NamedSharding(self.mesh, spec))
+
+        return {k: put(k, v) for k, v in np_batch.items()}
+
+    def run(self, n_steps: int,
+            on_straggler: Optional[Callable[["Trainer"], None]] = None
+            ) -> Dict[str, Any]:
+        losses = []
+        for _ in range(n_steps):
+            t0 = time.perf_counter()
+            np_batch = self.data.batch_at(self.step)
+            batch = self._device_batch(np_batch)
+            with jax.set_mesh(self.mesh):
+                self.state, metrics = self._jit(self.state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            losses.append(float(metrics["loss"]))
+            self.step += 1
+            self.data.state.step = self.step
+            # --- straggler detection (observed vs EWMA-expected) ---
+            if self._ewma is None:
+                self._ewma = dt
+            else:
+                if dt > self.cfg.straggler_factor * self._ewma:
+                    self._slow += 1
+                else:
+                    self._slow = 0
+                self._ewma = 0.9 * self._ewma + 0.1 * dt
+                if self._slow >= self.cfg.straggler_patience:
+                    self._slow = 0
+                    if on_straggler is not None:
+                        on_straggler(self)
+            if self.step % self.cfg.ckpt_every == 0:
+                self.ckpt.save_async(self.step, self.state,
+                                     extra={"data": self.data.state.to_dict()})
+        self.ckpt.wait()
+        return {"losses": losses, "step": self.step}
+
+    # ------------------------------------------- elastic replan (HETHUB) --
+    def replan(self, new_cluster: ClusterSpec, *, global_batch: int,
+               seq_len: int, **search_kw):
+        """Node failure / elastic scale event: search a new plan on the
+        surviving cluster, checkpoint-now, rebuild, reshard, resume."""
+        result = planner_mod.search(new_cluster, self.bundle.cfg,
+                                    global_batch=global_batch,
+                                    seq_len=seq_len, **search_kw)
+        self.ckpt.wait()
+        ckpt.save(self.cfg.ckpt_dir, self.step, self.state,
+                  extra={"data": self.data.state.to_dict()})
+        self.cluster = new_cluster
+        self.plan = result.plan
+        self.replans += 1
+        self._build()
+        self._init_or_restore()   # restores the checkpoint just written
+        return result

@@ -1,0 +1,116 @@
+"""Parse collective-communication volume out of compiled (post-SPMD) HLO.
+
+``compiled.as_text()`` contains the partitioned module; every cross-device
+transfer appears as all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute.  We sum result-shape bytes per op kind and convert to
+per-device *link traffic* with ring-algorithm factors — the collective term
+of the roofline (EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterable, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %ag = bf16[16,4096,512]{2,1,0} all-gather(%x), replica_groups=...
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_TUPLE_ELT_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, float]
+    traffic_by_op: Dict[str, float]    # per-device ring link traffic
+    count_by_op: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def total_traffic(self) -> float:
+        return sum(self.traffic_by_op.values())
+
+
+def collective_stats(hlo_text: str, body_scale: float = 1.0
+                     ) -> CollectiveStats:
+    """body_scale: multiplier applied to collectives found OUTSIDE the ENTRY
+    computation.  XLA keeps scan (while-loop) bodies as separate
+    computations that appear once in the text; passing the scan trip count
+    here restores per-step collective volume (loop-invariant collectives get
+    hoisted into ENTRY by LICM, so they stay x1)."""
+    bytes_by: Dict[str, float] = {}
+    traffic_by: Dict[str, float] = {}
+    count_by: Dict[str, int] = {}
+    in_entry = False
+    depth = 0
+    for line in hlo_text.splitlines():
+        ls = line.lstrip()
+        if ls.startswith("ENTRY "):
+            in_entry = True
+            depth = 0
+        if in_entry:
+            depth += line.count("{") - line.count("}")
+            if depth <= 0 and "}" in line and not ls.startswith("ENTRY"):
+                in_entry = False
+        if not any(c in line for c in _COLLECTIVES):
+            continue
+        if "-done(" in line:      # async pair: count the -start only
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        scale = 1.0 if in_entry else body_scale
+        tuple_inner, dtype, dims, op = m.groups()
+        if tuple_inner is not None:
+            size = sum(_shape_bytes(t, d)
+                       for t, d in _TUPLE_ELT_RE.findall(tuple_inner))
+        else:
+            size = _shape_bytes(dtype, dims)
+        # group size n (first replica group or iota shape)
+        n = 0
+        g = _GROUPS_RE.search(line)
+        if g:
+            n = len(g.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                n = int(gi.group(2))
+        n = max(n, 2)
+        # result-shape bytes -> per-device ring traffic
+        if op == "all-reduce":
+            traffic = 2.0 * (n - 1) / n * size
+        elif op == "all-gather":
+            traffic = (n - 1) / n * size          # size = full result
+        elif op == "reduce-scatter":
+            traffic = (n - 1) * size              # size = scattered result
+        elif op == "all-to-all":
+            traffic = (n - 1) / n * size
+        else:                                      # collective-permute
+            traffic = float(size)
+        bytes_by[op] = bytes_by.get(op, 0.0) + size * scale
+        traffic_by[op] = traffic_by.get(op, 0.0) + traffic * scale
+        count_by[op] = count_by.get(op, 0) + 1
+    return CollectiveStats(bytes_by, traffic_by, count_by)

@@ -1,0 +1,64 @@
+"""Roofline terms from dry-run artifacts (TPU v5e constants)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / link (ICI)
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_traffic_per_device: float
+    n_chips: int
+    model_flops_total: float     # 6*N*D yardstick (total, all chips)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_traffic_per_device / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lb(self) -> float:
+        """Lower-bound step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/redundancy waste detector."""
+        hlo_total = self.flops_per_device * self.n_chips
+        return self.model_flops_total / hlo_total if hlo_total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Achievable MFU if the dominant term were the only cost."""
+        t = self.step_time_lb
+        return (self.model_flops_total / (self.n_chips * PEAK_FLOPS)) / t \
+            if t else 0.0
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "compute_s": round(self.compute_s, 6),
+            "memory_s": round(self.memory_s, 6),
+            "collective_s": round(self.collective_s, 6),
+            "dominant": self.dominant,
+            "useful_flops_ratio": round(self.useful_flops_ratio, 4),
+            "mfu_bound": round(self.mfu_bound, 4),
+        }

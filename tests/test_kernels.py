@@ -1,0 +1,133 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import ref
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.ssm_scan import ssm_scan
+from repro.kernels.swiglu import swiglu
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,Sq,Sk,H,Hk,hd", [
+    (1, 128, 128, 4, 4, 64),      # MHA square
+    (2, 128, 128, 4, 2, 64),      # GQA
+    (1, 256, 256, 8, 1, 128),     # MQA, 128 head dim
+    (2, 128, 256, 4, 2, 64),      # decode-suffix (Sq < Sk, end-aligned)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes(B, Sq, Sk, H, Hk, hd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Sk, Hk, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Sk, Hk, hd), jnp.float32).astype(dtype)
+    out = fa.flash_attention(q, k, v, causal=True, interpret=True,
+                             block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [32, 64])
+def test_flash_attention_swa(window):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 64))
+    k = jax.random.normal(ks[1], (1, 128, 2, 64))
+    v = jax.random.normal(ks[2], (1, 128, 2, 64))
+    out = fa.flash_attention(q, k, v, causal=True, window=window,
+                             interpret=True, block_q=32, block_k=32)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_softcap():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 64))
+    k = jax.random.normal(ks[1], (1, 128, 2, 64))
+    v = jax.random.normal(ks[2], (1, 128, 2, 64))
+    out = fa.flash_attention(q, k, v, causal=True, softcap=30.0,
+                             interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 64), dtype=jnp.float32)
+    k = jax.random.normal(ks[1], (2, 128, 4, 64))
+    v = jax.random.normal(ks[2], (2, 128, 4, 64))
+    out = fa.flash_attention(q, k, v, causal=False, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", [(64, 256), (3, 17, 384), (2, 8, 8, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(shape, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(k1, shape, jnp.float32).astype(dtype)
+    s = jax.random.normal(k2, (shape[-1],), jnp.float32).astype(dtype)
+    out = rmsnorm(x, s, interpret=True, block_rows=16)
+    want = ref.rmsnorm_ref(x, s)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,S,di,ds,chunk,dib", [
+    (1, 64, 64, 8, 16, 32),
+    (2, 128, 128, 16, 64, 64),
+    (1, 256, 64, 4, 128, 64),
+])
+def test_ssm_scan(B, S, di, ds, chunk, dib):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    u = jax.random.normal(ks[0], (B, S, di))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, di)) - 1.0)
+    Bc = jax.random.normal(ks[2], (B, S, ds))
+    Cc = jax.random.normal(ks[3], (B, S, ds))
+    A = -jnp.exp(jax.random.normal(ks[4], (di, ds)) * 0.3)
+    out = ssm_scan(u, dt, Bc, Cc, A, chunk=chunk, di_block=dib,
+                   interpret=True)
+    want = ref.ssm_scan_ref(u, dt, Bc, Cc, A)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("shape", [(32, 128), (2, 64, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swiglu(shape, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    g = jax.random.normal(k1, shape, jnp.float32).astype(dtype)
+    u = jax.random.normal(k2, shape, jnp.float32).astype(dtype)
+    out = swiglu(g, u, interpret=True, block_rows=16)
+    want = ref.swiglu_ref(g, u)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_model_attention_uses_same_math():
+    """layers.attention (model path) agrees with the kernel oracle."""
+    from repro.models.config import ModelConfig
+    from repro.models.layers import _sdpa
+    cfg = ModelConfig(name="t", family="dense", num_layers=1, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64,
+                      param_dtype="float32", dtype="float32")
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, 32, 4, 16))
+    k = jax.random.normal(ks[1], (2, 32, 2, 16))
+    v = jax.random.normal(ks[2], (2, 32, 2, 16))
+    mask = jnp.tril(jnp.ones((32, 32), bool))
+    out = _sdpa(q, k, v, mask, cfg)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
