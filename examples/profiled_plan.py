@@ -1,0 +1,56 @@
+"""Measured-cost planning end to end (paper §3.2's profiling loop).
+
+1. Microbenchmark THIS host (tiny --quick sweep) into a profile store.
+2. Wrap the store in a ProfiledCostModel, mapping the paper cluster's
+   device names onto the profiled device kind (profile a small sample,
+   predict the big cluster — the paper's methodology).
+3. Search a parallel plan against measured costs and compare with the
+   analytic prediction for the same plan.
+
+Run:  PYTHONPATH=src python examples/profiled_plan.py
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.llama2_paper import LLAMA2_70B        # noqa: E402
+from repro.core import cluster as C                      # noqa: E402
+from repro.core import planner                           # noqa: E402
+from repro.core.predictor import PerformancePredictor    # noqa: E402
+from repro.profile import ProfiledCostModel              # noqa: E402
+from repro.profile import runner                         # noqa: E402
+
+
+def main():
+    print("== 1. profiling this host (quick sweep) ==")
+    store = runner.run(quick=True, verbose=False)
+    dev = runner.device_kind()
+    print(f"   {len(store)} entries measured on '{dev}' -> {store.path}")
+
+    print("== 2. measured cost source for the paper's 12-node cluster ==")
+    cl = C.paper_cluster_of_size(12)
+    src = ProfiledCostModel(store, device_map={g.device.name: dev
+                                               for g in cl.groups})
+
+    print("== 3. planner search: analytic vs profiled ==")
+    kw = dict(global_batch=96, seq_len=4096, pp_options=[6], tp_options=[8],
+              micro_bs_options=[1], require_fit=False)
+    ana = planner.search(cl, LLAMA2_70B, **kw)
+    pro = planner.search(cl, LLAMA2_70B, cost_source=src, **kw)
+    print(f"   analytic : {ana.plan.describe()}  "
+          f"iter={ana.prediction.iter_time:.3f}s mfu={ana.prediction.mfu:.3f}")
+    print(f"   profiled : {pro.plan.describe()}  "
+          f"iter={pro.prediction.iter_time:.3f}s "
+          f"(profile hits={src.hits}, analytic fallbacks={src.misses})")
+
+    pred = PerformancePredictor(cl, LLAMA2_70B, cost_source=src)
+    p = pred.predict(pro.plan)
+    print(f"   per-stage fwd times (measured path): "
+          f"{[round(t, 4) for t in p.stage_times_fwd]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,20 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
+# Transports a ParallelPlan may route the heterogeneous boundary over.
+# THE single source of truth for transport names: ParallelPlan validates
+# against this at construction and link_gbps() at lookup.
+TRANSPORTS = ("gpu", "cpu")
+
+
+def validate_transport(name: str) -> str:
+    if name not in TRANSPORTS:
+        raise ValueError(
+            f"unknown transport {name!r}; valid transports: {TRANSPORTS} "
+            "('gpu' = GPU-direct RDMA across the boundary, 'cpu' = "
+            "CPU-staged PCIe+ethernet path)")
+    return name
+
 
 @dataclasses.dataclass(frozen=True)
 class DeviceType:
@@ -75,6 +89,7 @@ class ClusterSpec:
 
     def link_gbps(self, ga: int, gb: int, transport: str = "gpu") -> float:
         """Effective Gb/s between node groups (indices into .groups)."""
+        validate_transport(transport)
         if ga == gb:
             return self.ib_gbps * self.ib_eff
         if transport == "cpu":

@@ -11,7 +11,7 @@ TFLOP/s (compute).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Protocol, Tuple, runtime_checkable
 
 from repro.models.config import ModelConfig
 
@@ -98,11 +98,81 @@ def comm_volume(cfg: ModelConfig, micro_bs: int, seq_len: int,
 
 
 def calibrate(cfg: ModelConfig, seq_len: int,
-              hlo_flops_per_token: Optional[float] = None) -> float:
+              hlo_flops_per_token: Optional[float] = None,
+              *, allow_speedup: bool = False) -> float:
     """Measured-vs-analytic FLOPs ratio from the dry-run cost analysis
-    (remat/redundancy factor); multiply stage compute times by this."""
+    (remat/redundancy factor); multiply stage compute times by this.
+
+    ``allow_speedup=False`` clamps the ratio at 1.0 — appropriate when the
+    measurement is an HLO FLOP *count*, which can only exceed the analytic
+    one (remat, redundancy).  A measured wall-time profile can legitimately
+    report ratio < 1 (fused kernels beating the analytic count); pass
+    ``allow_speedup=True`` for those sources so the clamp does not silently
+    bias the profiled cost model."""
     if not hlo_flops_per_token:
         return 1.0
     analytic = (layer_cost(cfg, seq_len).flops_fwd * cfg.num_layers
                 + embedding_flops(cfg)) * 3.0  # fwd+bwd
-    return max(hlo_flops_per_token / analytic, 1.0)
+    ratio = hlo_flops_per_token / analytic
+    return ratio if allow_speedup else max(ratio, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# CostSource: the seam between the performance predictor and where its
+# numbers come from.  The analytic source below derives everything from
+# ModelConfig + ClusterSpec constants; repro.profile.model.ProfiledCostModel
+# serves measured values from a ProfileStore with per-entry fallback here.
+# ---------------------------------------------------------------------------
+@runtime_checkable
+class CostSource(Protocol):
+    """What the distributed performance predictor needs to know."""
+
+    def layer_cost(self, cfg: ModelConfig, seq_len: int) -> LayerCost:
+        """Per-layer FLOPs/param/activation costs."""
+
+    def embedding_flops(self, cfg: ModelConfig) -> float:
+        """Unembedding matmul FLOPs per token."""
+
+    def comm_volume(self, cfg: ModelConfig, micro_bs: int, seq_len: int,
+                    layers_in_stage: int, dp: int) -> CommVolume:
+        """Per-microbatch communication volumes in bytes."""
+
+    def link_gbps(self, cluster, ga: int, gb: int,
+                  transport: str = "gpu") -> float:
+        """Effective Gb/s between node groups ga -> gb."""
+
+    def layer_time(self, device_kind: str, cfg: ModelConfig, seq_len: int,
+                   micro_bs: int, tp: int) -> Optional[Tuple[float, float]]:
+        """Measured (fwd_s, bwd_s) per layer per microbatch on
+        ``device_kind``, or None when only derived costs are available
+        (the predictor then divides FLOPs by effective TFLOP/s)."""
+
+    def flops_calibrated(self, cfg: ModelConfig, seq_len: int) -> bool:
+        """True when layer_cost's FLOPs already embed a measured
+        remat/redundancy factor (e.g. HLO-derived): the predictor must then
+        skip its scalar ``calibration`` knob or the factor applies twice."""
+
+
+class AnalyticCostSource:
+    """The hand-derived model: module-level functions behind the protocol."""
+
+    def layer_cost(self, cfg: ModelConfig, seq_len: int) -> LayerCost:
+        return layer_cost(cfg, seq_len)
+
+    def embedding_flops(self, cfg: ModelConfig) -> float:
+        return embedding_flops(cfg)
+
+    def comm_volume(self, cfg: ModelConfig, micro_bs: int, seq_len: int,
+                    layers_in_stage: int, dp: int) -> CommVolume:
+        return comm_volume(cfg, micro_bs, seq_len, layers_in_stage, dp)
+
+    def link_gbps(self, cluster, ga: int, gb: int,
+                  transport: str = "gpu") -> float:
+        return cluster.link_gbps(ga, gb, transport)
+
+    def layer_time(self, device_kind: str, cfg: ModelConfig, seq_len: int,
+                   micro_bs: int, tp: int) -> Optional[Tuple[float, float]]:
+        return None
+
+    def flops_calibrated(self, cfg: ModelConfig, seq_len: int) -> bool:
+        return False

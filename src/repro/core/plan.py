@@ -9,6 +9,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Tuple
 
+from repro.core.cluster import validate_transport
+
 
 @dataclasses.dataclass(frozen=True)
 class StagePlacement:
@@ -34,6 +36,9 @@ class ParallelPlan:
     global_batch: int
     seq_len: int
     transport: str = "gpu"   # iccl transport across the hetero boundary
+
+    def __post_init__(self):
+        validate_transport(self.transport)
 
     @property
     def pp(self) -> int:

@@ -20,7 +20,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterable, List, Optional, Sequence, Tuple
 
-from repro.core import segmentation
+from repro.core import costmodel, segmentation
 from repro.core.cluster import ClusterSpec
 from repro.core.plan import ParallelPlan, StagePlacement
 from repro.core.predictor import PerformancePredictor, Prediction
@@ -74,10 +74,17 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
            micro_bs_options: Sequence[int] = (1, 2),
            nonuniform: bool = True, schedule: str = "1f1b",
            calibration: float = 1.0, require_fit: bool = True,
-           include_tp_comm: bool = True) -> PlannerResult:
-    """DFS over the three-level tree; returns the min-iter-time plan."""
+           include_tp_comm: bool = True,
+           cost_source: Optional[costmodel.CostSource] = None
+           ) -> PlannerResult:
+    """DFS over the three-level tree; returns the min-iter-time plan.
+
+    ``cost_source`` routes every leaf's scoring through measured costs
+    (repro.profile.model.ProfiledCostModel) instead of the analytic model;
+    None keeps the analytic default."""
     pred = PerformancePredictor(cluster, cfg, calibration,
-                                include_tp_comm=include_tp_comm)
+                                include_tp_comm=include_tp_comm,
+                                cost_source=cost_source)
     best: Optional[Tuple[Prediction, ParallelPlan]] = None
     log: List[Tuple[str, float]] = []
     evaluated = 0

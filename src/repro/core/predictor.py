@@ -1,6 +1,7 @@
 """Distributed performance predictor (paper §3.2).
 
-Combines the analytic/profiled cost model with the ICCL transport models and
+Combines a cost source (analytic by default, or a measured profile via
+repro.profile.model.ProfiledCostModel) with the ICCL transport models and
 the workload simulator to predict iteration time, throughput (Eq.1 TGS),
 MFU (Eq.2) and peak memory for a candidate ParallelPlan on a ClusterSpec —
 without touching the cluster.
@@ -8,7 +9,7 @@ without touching the cluster.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 from repro.core import costmodel, simulator
 from repro.core.cluster import ClusterSpec
@@ -38,40 +39,66 @@ class PerformancePredictor:
     """include_tp_comm=False when DeviceType.mfu is calibrated from
     *achieved* homogeneous throughput (paper Fig.6/7/8): the measured MFU
     already absorbs intra-node TP overhead, so the simulator only adds the
-    overheads heterogeneity introduces (bubble, inter-stage P2P, DP)."""
+    overheads heterogeneity introduces (bubble, inter-stage P2P, DP).
+
+    ``cost_source`` decides where layer costs, comm volumes and link
+    bandwidths come from: the analytic model (default) or a measured
+    profile.  When the source serves a measured per-layer wall time for a
+    stage's device, that time is used directly (it already includes TP
+    overhead and kernel-fusion effects); otherwise FLOPs are divided by
+    effective TFLOP/s as before."""
 
     def __init__(self, cluster: ClusterSpec, cfg: ModelConfig,
-                 calibration: float = 1.0, include_tp_comm: bool = True):
+                 calibration: float = 1.0, include_tp_comm: bool = True,
+                 cost_source: Optional[costmodel.CostSource] = None):
         self.cluster = cluster
         self.cfg = cfg
         self.calibration = calibration
         self.include_tp_comm = include_tp_comm
+        self.src = cost_source or costmodel.AnalyticCostSource()
 
     # ---------------------------------------------------------- pieces ----
     def stage_timing(self, plan: ParallelPlan, i: int) -> simulator.StageTiming:
         st = plan.stages[i]
         g = self.cluster.groups[st.group]
         mbs = plan.stage_micro_bs(i)
-        lc = costmodel.layer_cost(self.cfg, plan.seq_len)
         tokens = mbs * plan.seq_len
-        flops = lc.flops_fwd * st.n_layers * tokens
-        if st.is_last:
-            flops += costmodel.embedding_flops(self.cfg) * tokens
         eff = g.device.effective_tflops * 1e12 * st.tp
-        t_fwd = self.calibration * flops / eff
-        # TP all-reduce: 2 per layer fwd, ring factor 2(tp-1)/tp, NVLink-class
-        if st.tp > 1 and self.include_tp_comm:
-            vol = costmodel.comm_volume(self.cfg, mbs, plan.seq_len,
-                                        st.n_layers, st.dp).tp_per_layer
-            ring = 2.0 * (st.tp - 1) / st.tp
-            t_fwd += st.n_layers * 2 * vol * ring / (g.intra_node_gbps * GBPS)
-        t_bwd = 2.0 * t_fwd
+        measured = self.src.layer_time(g.device.name, self.cfg,
+                                       plan.seq_len, mbs, st.tp)
+        if measured is not None:
+            # profiled path: wall time per layer already includes TP comm
+            t_fwd = measured[0] * st.n_layers
+            t_bwd = measured[1] * st.n_layers
+            if st.is_last:
+                emb = self.src.embedding_flops(self.cfg) * tokens / eff
+                t_fwd += emb
+                t_bwd += 2.0 * emb
+        else:
+            lc = self.src.layer_cost(self.cfg, plan.seq_len)
+            flops = lc.flops_fwd * st.n_layers * tokens
+            if st.is_last:
+                flops += self.src.embedding_flops(self.cfg) * tokens
+            # HLO-derived flops already embed the remat/redundancy factor
+            # the scalar knob models — never apply both
+            cal = (1.0 if self.src.flops_calibrated(self.cfg, plan.seq_len)
+                   else self.calibration)
+            t_fwd = cal * flops / eff
+            # TP all-reduce: 2/layer fwd, ring factor 2(tp-1)/tp, NVLink-class
+            if st.tp > 1 and self.include_tp_comm:
+                vol = self.src.comm_volume(self.cfg, mbs, plan.seq_len,
+                                           st.n_layers, st.dp).tp_per_layer
+                ring = 2.0 * (st.tp - 1) / st.tp
+                t_fwd += st.n_layers * 2 * vol * ring / (g.intra_node_gbps
+                                                         * GBPS)
+            t_bwd = 2.0 * t_fwd
         # P2P send to next stage (paper Eq.3 volume over the boundary link)
         if i + 1 < plan.pp:
             nxt = plan.stages[i + 1]
-            bw = self.cluster.link_gbps(st.group, nxt.group, plan.transport)
-            vol = costmodel.comm_volume(self.cfg, mbs, plan.seq_len,
-                                        st.n_layers, st.dp).pp_p2p
+            bw = self.src.link_gbps(self.cluster, st.group, nxt.group,
+                                    plan.transport)
+            vol = self.src.comm_volume(self.cfg, mbs, plan.seq_len,
+                                       st.n_layers, st.dp).pp_p2p
             send = vol / (bw * GBPS)
         else:
             send = 0.0
@@ -81,16 +108,17 @@ class PerformancePredictor:
         if plan.dp <= 1:
             return 0.0
         times = []
-        lc = costmodel.layer_cost(self.cfg, plan.seq_len)
+        lc = self.src.layer_cost(self.cfg, plan.seq_len)
         for st in plan.stages:
             vol = (lc.param_bytes * st.n_layers / st.tp) \
                 * 2.0 * (st.dp - 1) / st.dp
-            times.append(vol / (self.cluster.ib_gbps * self.cluster.ib_eff
-                                * GBPS))
+            bw = self.src.link_gbps(self.cluster, st.group, st.group,
+                                    plan.transport)
+            times.append(vol / (bw * GBPS))
         return max(times)
 
     def peak_memory(self, plan: ParallelPlan) -> Tuple[float, ...]:
-        lc = costmodel.layer_cost(self.cfg, plan.seq_len)
+        lc = self.src.layer_cost(self.cfg, plan.seq_len)
         out = []
         for i, st in enumerate(plan.stages):
             params = lc.param_bytes * st.n_layers / st.tp

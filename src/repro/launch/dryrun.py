@@ -35,6 +35,51 @@ from repro.utils.roofline import Roofline
 ART = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
 
 
+def record_profile(rec, cell, mesh_kind: str, n_chips: int):
+    """Write HLO-derived costs into the profile database as a calibration
+    source for the ProfiledCostModel (device_kind 'hlo' = device-independent
+    compiled-counts, distinct from wall-time measurements)."""
+    from repro.core import costmodel
+    from repro.profile.model import CALIB_DEVICE
+    from repro.profile.store import ProfileStore
+
+    cfg, shp = cell.cfg, cell.shape
+    # open/save per cell, not per run: --all isolates every cell in its own
+    # subprocess (SPMD CHECK failures are C++ aborts), so this process may
+    # only ever see one cell and the file is the merge point
+    store = ProfileStore.for_device(CALIB_DEVICE)
+    key = {"arch": cfg.name, "shape": rec["shape"], "mesh": mesh_kind}
+    store.put(CALIB_DEVICE, "hlo_cost", key,
+              {"flops_per_device": rec["cost"]["flops_per_device"],
+               "bytes_per_device": rec["cost"]["bytes_per_device"],
+               "traffic_per_device":
+                   rec["cost"]["traffic_per_device_corrected"]})
+    if shp.step == "train":
+        tokens = shp.global_batch * shp.seq_len
+        per_tok = rec["cost"]["flops_per_device"] * n_chips / tokens
+        ratio = costmodel.calibrate(cfg, shp.seq_len, per_tok)
+        store.put(CALIB_DEVICE, "calibration",
+                  {"arch": cfg.name, "seq_len": shp.seq_len},
+                  {"hlo_flops_per_token": per_tok, "ratio": ratio})
+        # per-layer fwd FLOPs/token: strip embedding, undo the 3x fwd+bwd
+        layer_f = ((per_tok / 3.0 - costmodel.embedding_flops(cfg))
+                   / max(cfg.num_layers, 1))
+        if layer_f > 0:
+            store.put(CALIB_DEVICE, "layer_cost",
+                      {"arch": cfg.name, "seq_len": shp.seq_len},
+                      {"flops_fwd": layer_f})
+    store.save()
+
+
+def cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() returns a dict on modern jax, a one-element
+    list of dicts on 0.4.x — normalize."""
+    c = compiled.cost_analysis()
+    if isinstance(c, (list, tuple)):
+        c = c[0] if c else {}
+    return c
+
+
 def model_flops_total(cfg, shape) -> float:
     """6*N*D yardstick: fwd+bwd for train (3x fwd), fwd for serving."""
     if shape.step == "train":
@@ -66,7 +111,7 @@ def _probe_costs(arch, shape_name, mesh, n_layers_probe, strategy="tp",
     cell = cells_mod.build_cell(arch, shape_name, False,
                                 extra_overrides=ov, strategy=strategy)
     compiled = cell.lower(mesh).compile()
-    cost = compiled.cost_analysis()
+    cost = cost_dict(compiled)
     stats = hlo_util.collective_stats(compiled.as_text())
     return (float(cost.get("flops", 0.0)),
             float(cost.get("bytes accessed", 0.0)),
@@ -110,7 +155,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, mesh, verbose=True,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = cost_dict(compiled)
         hlo_text = compiled.as_text()
         # scan trip count: collectives inside while bodies replay per layer
         # (hybrid stacks scan over full pattern cycles)
@@ -179,6 +224,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, mesh, verbose=True,
             print(f"  collectives: {rec['collectives']['count_by_op']} "
                   f"traffic/dev={stats.total_traffic/1e9:.3f}GB")
             print(f"  roofline: {rec['roofline']}")
+        try:
+            record_profile(rec, cell, mesh_kind, n_chips)
+        except Exception as pe:  # noqa: BLE001 — profiling must not fail runs
+            rec["profile_error"] = f"{type(pe).__name__}: {pe}"
     except Exception as e:  # noqa: BLE001 — record, continue the matrix
         rec.update(error=f"{type(e).__name__}: {e}",
                    trace=traceback.format_exc()[-2000:])

@@ -1,0 +1,11 @@
+"""Profiling & calibration subsystem (paper §3.2's measurement loop).
+
+``runner`` measures (kernels, layers, collectives), ``store`` persists the
+measurements with provenance, ``model`` serves them to the performance
+predictor behind the CostSource protocol with per-entry analytic fallback.
+"""
+from repro.profile.model import CALIB_DEVICE, ProfiledCostModel
+from repro.profile.store import PROFILE_DIR, Entry, ProfileStore
+
+__all__ = ["CALIB_DEVICE", "Entry", "PROFILE_DIR", "ProfiledCostModel",
+           "ProfileStore"]

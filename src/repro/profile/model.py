@@ -1,0 +1,116 @@
+"""ProfiledCostModel: measured costs behind the CostSource protocol.
+
+Reads a ProfileStore and serves the distributed performance predictor
+(paper §3.2's profile-driven path).  Every read falls back *per entry* to
+the analytic model when the requested point is missing from the profile, so
+a partial sweep still produces a usable cost source — the profile narrows
+the gap measurement by measurement instead of gating on completeness.
+
+Ops consumed (written by repro.profile.runner and launch/dryrun):
+  layer_cost       {arch, seq_len} -> flops_fwd / param_bytes /
+                   act_bytes_per_token    (HLO-derived; device_kind 'hlo')
+  embedding_flops  {arch}          -> flops
+  layer_step       {arch, seq_len, micro_bs, tp} -> fwd_s / bwd_s
+                   (wall-time measured per layer on a real device)
+  link             {scope[, transport]} -> gbps  (measured collectives)
+
+``device_map`` translates ClusterSpec device names to profile device kinds
+(profile a small sample of one device type, predict a cluster of them —
+the paper's methodology).
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Dict, Optional, Tuple
+
+from repro.core import costmodel
+from repro.core.cluster import validate_transport
+from repro.models.config import ModelConfig
+from repro.profile.store import ProfileStore
+
+# device_kind under which device-independent (HLO-derived) entries live
+CALIB_DEVICE = "hlo"
+
+
+class ProfiledCostModel:
+    def __init__(self, store: ProfileStore,
+                 fallback: Optional[costmodel.CostSource] = None,
+                 device_map: Optional[Dict[str, str]] = None):
+        self.store = store
+        self.fallback = fallback or costmodel.AnalyticCostSource()
+        self.device_map = dict(device_map or {})
+        self.hits = 0       # profile-served reads (observability: how much
+        self.misses = 0     # of a prediction actually rests on measurement)
+
+    @classmethod
+    def load(cls, path, fallback=None, device_map=None) -> "ProfiledCostModel":
+        return cls(ProfileStore.load(Path(path)), fallback=fallback,
+                   device_map=device_map)
+
+    # ------------------------------------------------------------ helpers --
+    def _dev(self, name: str) -> str:
+        return self.device_map.get(name, name)
+
+    def _interp(self, device_kind: str, op: str, shape: dict,
+                field: str) -> Optional[float]:
+        v = self.store.interpolate(device_kind, op, shape, field)
+        if v is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return v
+
+    # --------------------------------------------------------- CostSource --
+    def layer_cost(self, cfg: ModelConfig, seq_len: int) -> costmodel.LayerCost:
+        base = self.fallback.layer_cost(cfg, seq_len)
+        shape = {"arch": cfg.name, "seq_len": seq_len}
+        f = self._interp(CALIB_DEVICE, "layer_cost", shape, "flops_fwd")
+        p = self._interp(CALIB_DEVICE, "layer_cost", shape, "param_bytes")
+        a = self._interp(CALIB_DEVICE, "layer_cost", shape,
+                         "act_bytes_per_token")
+        return costmodel.LayerCost(
+            flops_fwd=f if f is not None else base.flops_fwd,
+            param_bytes=p if p is not None else base.param_bytes,
+            act_bytes_per_token=(a if a is not None
+                                 else base.act_bytes_per_token))
+
+    def embedding_flops(self, cfg: ModelConfig) -> float:
+        v = self._interp(CALIB_DEVICE, "embedding_flops",
+                         {"arch": cfg.name}, "flops")
+        return v if v is not None else self.fallback.embedding_flops(cfg)
+
+    def comm_volume(self, cfg: ModelConfig, micro_bs: int, seq_len: int,
+                    layers_in_stage: int, dp: int) -> costmodel.CommVolume:
+        # Volumes are exact byte counts (paper Eq.3) — the measured quantity
+        # is the *bandwidth* they move at, served by link_gbps below.
+        return self.fallback.comm_volume(cfg, micro_bs, seq_len,
+                                         layers_in_stage, dp)
+
+    def link_gbps(self, cluster, ga: int, gb: int,
+                  transport: str = "gpu") -> float:
+        validate_transport(transport)
+        dev = self._dev(cluster.groups[ga].device.name)
+        if ga == gb:
+            shape = {"scope": "intra"}
+        else:
+            shape = {"scope": "inter", "transport": transport}
+        v = self._interp(dev, "link", shape, "gbps")
+        return v if v is not None else self.fallback.link_gbps(
+            cluster, ga, gb, transport)
+
+    def flops_calibrated(self, cfg: ModelConfig, seq_len: int) -> bool:
+        return self.store.interpolate(
+            CALIB_DEVICE, "layer_cost",
+            {"arch": cfg.name, "seq_len": seq_len}, "flops_fwd") is not None
+
+    def layer_time(self, device_kind: str, cfg: ModelConfig, seq_len: int,
+                   micro_bs: int, tp: int) -> Optional[Tuple[float, float]]:
+        dev = self._dev(device_kind)
+        shape = {"arch": cfg.name, "seq_len": seq_len,
+                 "micro_bs": micro_bs, "tp": tp}
+        fwd = self._interp(dev, "layer_step", shape, "fwd_s")
+        bwd = self._interp(dev, "layer_step", shape, "bwd_s")
+        if fwd is None or bwd is None:
+            return self.fallback.layer_time(device_kind, cfg, seq_len,
+                                            micro_bs, tp)
+        return fwd, bwd

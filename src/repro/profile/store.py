@@ -1,0 +1,208 @@
+"""Versioned profile database (paper §3.2 'sampling' persisted).
+
+One JSON file per device kind under ``benchmarks/artifacts/profiles/``.
+Entries are keyed by (device_kind, op, shape): ``shape`` is a flat dict of
+axis name -> value (ints/floats are interpolation axes, strings are exact
+selectors).  Every entry carries provenance metadata (who measured it, with
+what jax/backend, when) so stale profiles are auditable rather than silent.
+
+The store supports three access patterns:
+  * exact ``get`` — the runner and tests;
+  * ``fold`` — online refinement: running-mean update of a measured value
+    (Trainer folds observed step wall-times back in);
+  * ``interpolate`` — multilinear interpolation over the numeric shape axes
+    (the ProfiledCostModel's read path).  Returns None when the requested
+    point cannot be bracketed, so callers can fall back per-entry to the
+    analytic model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+SCHEMA_VERSION = 1
+
+PROFILE_DIR = (Path(__file__).resolve().parents[3]
+               / "benchmarks" / "artifacts" / "profiles")
+
+
+def _key(device_kind: str, op: str, shape: Dict[str, Any]) -> str:
+    parts = [device_kind, op] + [f"{k}={shape[k]}" for k in sorted(shape)]
+    return "|".join(parts)
+
+
+@dataclasses.dataclass
+class Entry:
+    device_kind: str
+    op: str
+    shape: Dict[str, Any]
+    value: Dict[str, float]
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"device_kind": self.device_kind, "op": self.op,
+                "shape": self.shape, "value": self.value, "meta": self.meta}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Entry":
+        return cls(device_kind=d["device_kind"], op=d["op"],
+                   shape=dict(d["shape"]), value=dict(d["value"]),
+                   meta=dict(d.get("meta", {})))
+
+
+def default_meta() -> Dict[str, Any]:
+    """Provenance stamped onto new measurements."""
+    try:
+        import jax
+        backend = jax.default_backend()
+        jax_version = jax.__version__
+    except Exception:  # noqa: BLE001 — store must not require jax
+        backend = jax_version = "unknown"
+    return {"timestamp": time.time(), "jax": jax_version, "backend": backend,
+            "schema": SCHEMA_VERSION}
+
+
+class ProfileStore:
+    def __init__(self, path: Optional[Path] = None):
+        self.path = Path(path) if path else None
+        self._entries: Dict[str, Entry] = {}
+        self.meta: Dict[str, Any] = {"version": SCHEMA_VERSION,
+                                     "created": time.time()}
+
+    # ------------------------------------------------------------- io -----
+    @classmethod
+    def load(cls, path) -> "ProfileStore":
+        path = Path(path)
+        st = cls(path)
+        doc = json.loads(path.read_text())
+        if doc.get("version", 0) > SCHEMA_VERSION:
+            raise ValueError(f"profile {path} written by newer schema "
+                             f"v{doc['version']} (reader is v{SCHEMA_VERSION})")
+        st.meta = {k: v for k, v in doc.items() if k != "entries"}
+        for d in doc.get("entries", []):
+            e = Entry.from_dict(d)
+            st._entries[_key(e.device_kind, e.op, e.shape)] = e
+        return st
+
+    @classmethod
+    def open(cls, path) -> "ProfileStore":
+        """Load if the file exists, else a fresh store bound to the path."""
+        path = Path(path)
+        return cls.load(path) if path.exists() else cls(path)
+
+    @classmethod
+    def for_device(cls, device_kind: str, root: Optional[Path] = None
+                   ) -> "ProfileStore":
+        root = Path(root) if root else PROFILE_DIR
+        safe = "".join(c if (c.isalnum() or c in "-_.") else "_"
+                       for c in device_kind)
+        return cls.open(root / f"{safe}.json")
+
+    def save(self, path=None) -> Path:
+        path = Path(path) if path else self.path
+        if path is None:
+            raise ValueError("ProfileStore has no path bound; pass one")
+        path.parent.mkdir(parents=True, exist_ok=True)
+        doc = dict(self.meta)
+        doc["version"] = SCHEMA_VERSION
+        doc["updated"] = time.time()
+        doc["entries"] = [e.to_dict() for e in self._entries.values()]
+        tmp = path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(doc, indent=1, sort_keys=True))
+        tmp.replace(path)   # atomic: a reader never sees a torn profile
+        self.path = path
+        return path
+
+    # ---------------------------------------------------------- write -----
+    def put(self, device_kind: str, op: str, shape: Dict[str, Any],
+            value: Dict[str, float],
+            meta: Optional[Dict[str, Any]] = None) -> Entry:
+        e = Entry(device_kind, op, dict(shape), dict(value),
+                  meta if meta is not None else default_meta())
+        self._entries[_key(device_kind, op, e.shape)] = e
+        return e
+
+    def fold(self, device_kind: str, op: str, shape: Dict[str, Any],
+             field: str, measured: float, weight: float = 1.0) -> Entry:
+        """Online refinement: fold one observation into the stored value as
+        a weighted running mean (value keeps an ``n`` observation count)."""
+        e = self.get(device_kind, op, shape)
+        if e is None:
+            return self.put(device_kind, op, shape,
+                            {field: measured, "n": weight})
+        n = e.value.get("n", 1.0)
+        prev = e.value.get(field, measured)
+        e.value[field] = (prev * n + measured * weight) / (n + weight)
+        e.value["n"] = n + weight
+        e.meta.update(default_meta())
+        return e
+
+    # ----------------------------------------------------------- read -----
+    def get(self, device_kind: str, op: str,
+            shape: Dict[str, Any]) -> Optional[Entry]:
+        return self._entries.get(_key(device_kind, op, shape))
+
+    def entries(self, device_kind: Optional[str] = None,
+                op: Optional[str] = None) -> List[Entry]:
+        return [e for e in self._entries.values()
+                if (device_kind is None or e.device_kind == device_kind)
+                and (op is None or e.op == op)]
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def interpolate(self, device_kind: str, op: str, shape: Dict[str, Any],
+                    field: str) -> Optional[float]:
+        """Multilinear interpolation of ``value[field]`` at ``shape``.
+
+        String-valued shape axes select exactly; numeric axes interpolate.
+        Grid points outside the measured range clamp to the boundary (a
+        profile should not be silently extrapolated past its sweep).
+        Returns None if no matching entries exist or the surrounding grid
+        is incomplete — the caller falls back to its analytic model.
+        """
+        fixed = {k: v for k, v in shape.items() if isinstance(v, str)}
+        numeric = {k: float(v) for k, v in shape.items()
+                   if not isinstance(v, str)}
+        cands = [e for e in self.entries(device_kind, op)
+                 if all(e.shape.get(k) == v for k, v in fixed.items())
+                 and set(k for k, v in e.shape.items()
+                         if not isinstance(v, str)) == set(numeric)
+                 and field in e.value]
+        if not cands:
+            return None
+        axes = sorted(numeric)
+        return _multilinear(cands, axes, numeric, field)
+
+
+def _multilinear(cands: List[Entry], axes: List[str],
+                 point: Dict[str, float], field: str) -> Optional[float]:
+    if not axes:
+        return float(cands[0].value[field]) if cands else None
+    ax, rest = axes[0], axes[1:]
+    x = point[ax]
+    grid = sorted({float(e.shape[ax]) for e in cands})
+    if x <= grid[0]:
+        lo = hi = grid[0]
+    elif x >= grid[-1]:
+        lo = hi = grid[-1]
+    else:
+        import bisect
+        i = bisect.bisect_left(grid, x)
+        if grid[i] == x:
+            lo = hi = x
+        else:
+            lo, hi = grid[i - 1], grid[i]
+    v_lo = _multilinear([e for e in cands if float(e.shape[ax]) == lo],
+                        rest, point, field)
+    if lo == hi:
+        return v_lo
+    v_hi = _multilinear([e for e in cands if float(e.shape[ax]) == hi],
+                        rest, point, field)
+    if v_lo is None or v_hi is None:
+        return None
+    w = (x - lo) / (hi - lo)
+    return v_lo * (1.0 - w) + v_hi * w

@@ -5,7 +5,11 @@
     data pipeline state included;
   * straggler mitigation: per-step wall times feed an EWMA; sustained
     degradation beyond ``straggler_factor`` triggers the replan hook with a
-    degraded ClusterSpec (the paper's profiling loop run online);
+    degraded ClusterSpec;
+  * online profile refinement (the paper's profiling loop run online): when
+    constructed with a ProfileStore, observed step wall-times are folded
+    back into the profile as running means, so the planner's next search —
+    including the replan path below — scores plans against reality;
   * elastic scaling / node failure: ``replan(new_cluster)`` re-runs the
     automatic parallel planner on the surviving cluster, rebuilds the step,
     and reshards the latest checkpoint onto the new layout.
@@ -30,6 +34,7 @@ from repro.models.registry import ArchBundle
 from repro.optim.adamw import AdamWConfig
 from repro.parallel.sharding import ShardingRules
 from repro.train import steps as steps_mod
+from repro.utils import compat
 
 
 @dataclasses.dataclass
@@ -47,12 +52,14 @@ class Trainer:
     def __init__(self, bundle: ArchBundle, mesh, cfg: TrainerConfig,
                  cluster: Optional[ClusterSpec] = None,
                  plan: Optional[ParallelPlan] = None,
-                 opt_cfg: Optional[AdamWConfig] = None):
+                 opt_cfg: Optional[AdamWConfig] = None,
+                 profile_store=None):
         self.bundle = bundle
         self.mesh = mesh
         self.cfg = cfg
         self.cluster = cluster
         self.plan = plan
+        self.profile_store = profile_store   # repro.profile.ProfileStore
         self.opt_cfg = opt_cfg or AdamWConfig()
         self.rules = ShardingRules(bundle.cfg, tp=cfg.tp,
                                    dp_axes=("data",))
@@ -87,7 +94,7 @@ class Trainer:
             lambda k: steps_mod.init_train_state(self.bundle, k), key)
         shardings = self._state_shardings(state_sds)
         if step is None:
-            with jax.set_mesh(self.mesh):
+            with compat.set_mesh(self.mesh):
                 self.state = jax.jit(
                     lambda k: steps_mod.init_train_state(self.bundle, k),
                     out_shardings=shardings)(key)
@@ -117,13 +124,15 @@ class Trainer:
             t0 = time.perf_counter()
             np_batch = self.data.batch_at(self.step)
             batch = self._device_batch(np_batch)
-            with jax.set_mesh(self.mesh):
+            with compat.set_mesh(self.mesh):
                 self.state, metrics = self._jit(self.state, batch)
             jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0
             losses.append(float(metrics["loss"]))
             self.step += 1
             self.data.state.step = self.step
+            if self.profile_store is not None:
+                self._refine_profile(dt)
             # --- straggler detection (observed vs EWMA-expected) ---
             if self._ewma is None:
                 self._ewma = dt
@@ -141,7 +150,29 @@ class Trainer:
                 self.ckpt.save_async(self.step, self.state,
                                      extra={"data": self.data.state.to_dict()})
         self.ckpt.wait()
+        if self.profile_store is not None and self.profile_store.path:
+            self.profile_store.save()
         return {"losses": losses, "step": self.step}
+
+    # ------------------------------------- online profile refinement ------
+    def _refine_profile(self, dt: float):
+        """Fold one observed step wall-time into the profile (running mean
+        keyed by the exact workload shape), plus a per-layer estimate the
+        ProfiledCostModel can interpolate.  The first step after a (re)build
+        is excluded: it pays jit compilation, not steady-state time."""
+        if self._ewma is None:
+            return
+        from repro.profile.runner import device_kind
+        dev = device_kind()
+        cfgm = self.bundle.cfg
+        shape = {"arch": cfgm.name, "seq_len": self.cfg.seq_len,
+                 "global_batch": self.cfg.global_batch, "tp": self.cfg.tp}
+        self.profile_store.fold(dev, "observed_step", shape, "time_s", dt)
+        self.profile_store.fold(
+            dev, "observed_layer_step",
+            {"arch": cfgm.name, "seq_len": self.cfg.seq_len,
+             "micro_bs": self.cfg.global_batch, "tp": self.cfg.tp},
+            "step_s", dt / max(cfgm.num_layers, 1))
 
     # ------------------------------------------- elastic replan (HETHUB) --
     def replan(self, new_cluster: ClusterSpec, *, global_batch: int,
@@ -159,4 +190,8 @@ class Trainer:
         self.replans += 1
         self._build()
         self._init_or_restore()   # restores the checkpoint just written
+        # the rebuilt step recompiles on first use: restart the EWMA so the
+        # compile step is neither folded into the profile nor flagged slow
+        self._ewma = None
+        self._slow = 0
         return result

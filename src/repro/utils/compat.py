@@ -1,0 +1,38 @@
+"""Version-bridging shims for jax APIs that moved between 0.4.x and 0.6+.
+
+The codebase targets the modern spellings (``jax.shard_map``,
+``jax.set_mesh``); on older jaxlib builds those live elsewhere or do not
+exist.  Import from here instead of from ``jax`` directly:
+
+    from repro.utils.compat import shard_map, set_mesh
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax < 0.6: experimental home, and check_vma was spelled check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f=None, /, **kw):
+        if "check_vma" in kw:
+            kw["check_rep"] = kw.pop("check_vma")
+        if kw.get("mesh") is None:
+            # modern shard_map resolves the mesh from the surrounding
+            # `with mesh:` context; old shard_map needs it explicit
+            from jax._src import mesh as _mesh_lib
+            ctx = _mesh_lib.thread_resources.env.physical_mesh
+            if not ctx.empty:
+                kw["mesh"] = ctx
+        if f is None:
+            return lambda g: _shard_map(g, **kw)
+        return _shard_map(f, **kw)
+
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+else:
+    def set_mesh(mesh):
+        """jax < 0.6 fallback: Mesh itself is the context manager that binds
+        axis names for jit/shard_map in the enclosed region."""
+        return mesh

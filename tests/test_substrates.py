@@ -12,6 +12,7 @@ from repro.ckpt import checkpoint as ckpt
 from repro.data.pipeline import DataState, SyntheticTokens
 from repro.iccl import transports
 from repro.iccl.communicator import Communicator
+from repro.utils import compat
 from repro.models import registry
 from repro.train import steps
 from repro.train.trainer import Trainer, TrainerConfig
@@ -148,7 +149,7 @@ def test_iccl_collectives_single_axis():
                 comm.ireducescatter(v), comm.index())
 
     v = jnp.arange(4.0)
-    out = jax.shard_map(f, mesh=mesh, in_specs=(jax.sharding.PartitionSpec("x"),),
+    out = compat.shard_map(f, mesh=mesh, in_specs=(jax.sharding.PartitionSpec("x"),),
                         out_specs=(jax.sharding.PartitionSpec("x"),) * 3
                         + (jax.sharding.PartitionSpec(),),
                         check_vma=False)(v)
@@ -163,7 +164,7 @@ def test_iccl_compression_roundtrip():
     def f(x):
         return comm.iallreduce(x)
 
-    out = jax.shard_map(f, mesh=mesh,
+    out = compat.shard_map(f, mesh=mesh,
                         in_specs=(jax.sharding.PartitionSpec(),),
                         out_specs=jax.sharding.PartitionSpec())(v)
     assert out.dtype == jnp.float32
