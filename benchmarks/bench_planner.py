@@ -1,0 +1,165 @@
+"""Planner performance benchmark: fast engine vs the pre-change reference.
+
+Times ``planner.search`` for a Llama2-140B-class model on the paper's
+768-accelerator (128 AMD + 640 GPU-A) heterogeneous cluster, once with the
+fast engine (memoized costs, vectorized fastsim, dp_split, auto schedule
+selection) and once with the reference engine (the pre-fastsim planner:
+event-driven simulator, uncached cost reads, single 1f1b schedule).
+
+Writes ``benchmarks/artifacts/BENCH_planner.json`` (gitignored, uploaded
+by CI) with search wall-time, leaves evaluated and best predicted
+iter_time for both engines.  The fast engine must be >= 10x faster with a
+best predicted iter_time no worse than the reference's (its candidate set
+and schedule sweep are supersets).
+
+    PYTHONPATH=src:. python benchmarks/bench_planner.py [--quick]
+        [--check-baseline benchmarks/BENCH_planner.baseline.json]
+        [--write-baseline] [--record]
+
+``--quick`` shrinks the sweep for CI; ``--check-baseline`` exits 1 when
+the fast/reference wall-time ratio regresses more than 2x over the
+committed baseline (``--factor`` to override; the ratio cancels machine
+speed); ``--record`` snapshots the run to the *tracked*
+``benchmarks/BENCH_planner.json`` — the repo's perf trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+from benchmarks._paper import hetero_cluster
+from repro.configs.llama2_paper import LLAMA2_140B
+from repro.core import planner
+
+SEQ = 4096
+OUT = Path(__file__).resolve().parent / "artifacts" / "BENCH_planner.json"
+RECORD = Path(__file__).resolve().parent / "BENCH_planner.json"
+BASELINE = Path(__file__).resolve().parent / "BENCH_planner.baseline.json"
+
+
+def search_args(quick: bool) -> dict:
+    if quick:
+        return dict(global_batch=960, seq_len=SEQ, pp_options=[10, 12],
+                    tp_options=[8], micro_bs_options=[1],
+                    require_fit=False, include_tp_comm=False)
+    return dict(global_batch=1920, seq_len=SEQ,
+                pp_options=[6, 8, 10, 12, 16, 20, 24], tp_options=[4, 8],
+                micro_bs_options=[1, 2], require_fit=False,
+                include_tp_comm=False)
+
+
+def run_engine(cluster, engine: str, kw: dict) -> dict:
+    t0 = time.perf_counter()
+    res = planner.search(cluster, LLAMA2_140B, engine=engine, **kw)
+    wall = time.perf_counter() - t0
+    return {
+        "engine": engine,
+        "wall_s": round(wall, 4),
+        "evaluated": res.evaluated,
+        "iter_time_s": res.prediction.iter_time,
+        "schedule": res.plan.schedule,
+        "eager_slack": res.plan.eager_slack,
+        "plan": res.plan.describe(),
+        "layers": list(res.plan.layers),
+    }
+
+
+def run(quick: bool = False, verbose: bool = True) -> dict:
+    cluster = hetero_cluster(96)          # 96 nodes = 768 accelerators
+    kw = search_args(quick)
+    fast = run_engine(cluster, "fast", kw)
+    ref = run_engine(cluster, "reference", kw)
+    speedup = ref["wall_s"] / fast["wall_s"]
+    doc = {
+        "bench": "planner_search",
+        "model": LLAMA2_140B.name,
+        "cluster": "paper-96N768D (128 AMD + 640 GPU-A)",
+        "quick": quick,
+        "args": {k: v for k, v in kw.items()},
+        "fast": fast,
+        "reference": ref,
+        "speedup": round(speedup, 2),
+        "iter_time_ratio": fast["iter_time_s"] / ref["iter_time_s"],
+        "timestamp": time.time(),
+    }
+    # the >=10x claim is judged on the full reference search; --quick is
+    # a deliberately tiny sweep whose job is the CI regression guard
+    doc["ok"] = doc["iter_time_ratio"] <= 1.0 + 1e-9 and \
+        (quick or speedup >= 10.0)
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(json.dumps(doc, indent=1))
+    if verbose:
+        for row in (ref, fast):
+            print(f"  {row['engine']:9s} {row['wall_s']*1e3:9.1f} ms  "
+                  f"leaves={row['evaluated']:4d}  "
+                  f"iter={row['iter_time_s']*1e3:.2f} ms  "
+                  f"plan={row['plan']}")
+        print(f"  speedup: {speedup:.1f}x   iter_time ratio "
+              f"(fast/ref): {doc['iter_time_ratio']:.4f}")
+        print(f"  wrote {OUT}")
+    if not doc["ok"]:
+        print(f"  FAIL: need >=10x speedup (got {speedup:.1f}x) and "
+              f"fast iter_time <= reference "
+              f"(ratio {doc['iter_time_ratio']:.4f})")
+    return doc
+
+
+def check_baseline(doc: dict, path: Path, factor: float) -> bool:
+    """Regression gate vs the committed baseline.
+
+    Absolute wall-times are machine-speed dependent (a loaded CI runner is
+    not the authoring laptop), so the gated metric is the fast/reference
+    wall-time *ratio* — both engines run in the same process on the same
+    machine, so the ratio cancels machine speed and isolates fast-engine
+    regressions."""
+    base = json.loads(path.read_text())
+    if base.get("quick") != doc.get("quick"):
+        print("  FAIL: baseline and run use different sweeps "
+              f"(baseline quick={base.get('quick')}, run "
+              f"quick={doc.get('quick')}) — regenerate the baseline")
+        return False
+    base_ratio = base["fast"]["wall_s"] / base["reference"]["wall_s"]
+    got_ratio = doc["fast"]["wall_s"] / doc["reference"]["wall_s"]
+    allowed = base_ratio * factor
+    print(f"  baseline fast/ref wall ratio: {base_ratio:.4f}, "
+          f"allowed <= {allowed:.4f}, got {got_ratio:.4f}")
+    if got_ratio > allowed:
+        print(f"  FAIL: planner search wall-time regressed >{factor:.0f}x "
+              f"over committed baseline (relative to the reference engine)")
+        return False
+    return True
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sweep (CI)")
+    ap.add_argument("--check-baseline", type=Path, default=None,
+                    help="fail on wall-time regression vs this baseline")
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="allowed regression factor vs baseline")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help=f"also write {BASELINE.name}")
+    ap.add_argument("--record", action="store_true",
+                    help=f"snapshot the run to the tracked {RECORD.name}")
+    args = ap.parse_args()
+    doc = run(quick=args.quick)
+    ok = doc["ok"]
+    if args.write_baseline:
+        BASELINE.write_text(json.dumps(
+            {k: doc[k] for k in ("bench", "model", "quick", "fast",
+                                 "reference", "speedup")}, indent=1))
+        print(f"  wrote {BASELINE}")
+    if args.record:
+        RECORD.write_text(json.dumps(doc, indent=1))
+        print(f"  wrote {RECORD}")
+    if args.check_baseline:
+        ok = check_baseline(doc, args.check_baseline, args.factor) and ok
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

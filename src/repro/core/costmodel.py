@@ -153,6 +153,62 @@ class CostSource(Protocol):
         skip its scalar ``calibration`` knob or the factor applies twice."""
 
 
+class MemoizedCostSource:
+    """Caches every ``CostSource`` read of an inner source.
+
+    ``planner.search`` scores thousands of leaves whose cost lookups repeat
+    the same handful of keys — (device, micro_bs, tp, seq_len) for layer
+    times, (arch, seq_len) for layer costs — and a ``ProfiledCostModel``
+    read walks the profile store's entry list each time.  Wrapping the
+    source once per search makes every leaf after the first O(1) in
+    cost-source reads.  Keys use ``cfg.name`` (one search, one frozen
+    ModelConfig) and ``id(cluster)`` (one search, one ClusterSpec).
+    """
+
+    def __init__(self, inner: CostSource):
+        self.inner = inner
+        self._cache: dict = {}
+
+    def _memo(self, key, fn):
+        try:
+            return self._cache[key]
+        except KeyError:
+            v = self._cache[key] = fn()
+            return v
+
+    def layer_cost(self, cfg: ModelConfig, seq_len: int) -> LayerCost:
+        return self._memo(("lc", cfg.name, seq_len),
+                          lambda: self.inner.layer_cost(cfg, seq_len))
+
+    def embedding_flops(self, cfg: ModelConfig) -> float:
+        return self._memo(("emb", cfg.name),
+                          lambda: self.inner.embedding_flops(cfg))
+
+    def comm_volume(self, cfg: ModelConfig, micro_bs: int, seq_len: int,
+                    layers_in_stage: int, dp: int) -> CommVolume:
+        return self._memo(
+            ("cv", cfg.name, micro_bs, seq_len, layers_in_stage, dp),
+            lambda: self.inner.comm_volume(cfg, micro_bs, seq_len,
+                                           layers_in_stage, dp))
+
+    def link_gbps(self, cluster, ga: int, gb: int,
+                  transport: str = "gpu") -> float:
+        return self._memo(("lk", id(cluster), ga, gb, transport),
+                          lambda: self.inner.link_gbps(cluster, ga, gb,
+                                                       transport))
+
+    def layer_time(self, device_kind: str, cfg: ModelConfig, seq_len: int,
+                   micro_bs: int, tp: int) -> Optional[Tuple[float, float]]:
+        return self._memo(
+            ("lt", device_kind, cfg.name, seq_len, micro_bs, tp),
+            lambda: self.inner.layer_time(device_kind, cfg, seq_len,
+                                          micro_bs, tp))
+
+    def flops_calibrated(self, cfg: ModelConfig, seq_len: int) -> bool:
+        return self._memo(("fc", cfg.name, seq_len),
+                          lambda: self.inner.flops_calibrated(cfg, seq_len))
+
+
 class AnalyticCostSource:
     """The hand-derived model: module-level functions behind the protocol."""
 

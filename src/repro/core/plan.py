@@ -7,6 +7,7 @@ tree shape.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Tuple
 
 from repro.core.cluster import validate_transport
@@ -36,6 +37,10 @@ class ParallelPlan:
     global_batch: int
     seq_len: int
     transport: str = "gpu"   # iccl transport across the hetero boundary
+    # pipeline schedule this plan runs (and is scored) under; the planner
+    # selects these per plan (ROADMAP: per-stage schedule selection)
+    schedule: str = "1f1b"
+    eager_slack: int = 2     # only meaningful for schedule="1f1b-eager"
 
     def __post_init__(self):
         validate_transport(self.transport)
@@ -53,7 +58,6 @@ class ParallelPlan:
         """Sequences entering the pipeline per tick.  lcm over stage DP
         degrees so every stage's microbatch size is a whole number even when
         heterogeneous groups carry different DP."""
-        import math
         l = 1
         for s in self.stages:
             l = math.lcm(l, s.dp)
@@ -77,5 +81,9 @@ class ParallelPlan:
     def describe(self) -> str:
         seg = "".join(str(s.n_layers) for s in self.stages) \
             if max(self.layers) < 10 else "-".join(map(str, self.layers))
+        sched = self.schedule
+        if sched == "1f1b-eager":
+            sched += f"+{self.eager_slack}"
         return (f"pp={self.pp} tp={self.stages[0].tp} dp={self.dp} "
-                f"mbs={self.micro_bs} m={self.micro_batches} seg={seg}")
+                f"mbs={self.micro_bs} m={self.micro_batches} "
+                f"sched={sched} seg={seg}")

@@ -7,10 +7,26 @@ Three-level search tree, DFS-traversed:
   level 3: uniform TP inside a node                    [accelerators]
 
 Rules guiding the DFS (paper):
-  1. load balance — layers ∝ per-stage effective speed, then greedy
-     rebalancing against the simulated per-stage times;
+  1. load balance — layers ∝ per-stage effective speed;  the fast engine
+     derives per-stage per-layer times from the active ``CostSource`` (so
+     a measured profile drives the split, not nameplate TFLOPs) and adds
+     ``segmentation.dp_split`` — the exact min-bottleneck assignment
+     including boundary P2P sends — next to the proportional+rebalance
+     heuristic;
   2. minimum end-to-end time — every leaf is scored by the distributed
-     performance predictor (workload simulator), lowest wins.
+     performance predictor (workload simulator), lowest wins.  With
+     ``schedule="auto"`` each surviving split is scored under strict
+     ``1f1b`` and ``1f1b-eager`` across a small eager-slack sweep, and the
+     winning schedule is recorded in the plan.
+
+Engines:
+  * ``fast``       (default) memoized cost-source reads, cached per-stage
+    linear timing coefficients, vectorized fastsim scoring, schedule
+    sweep.  ~10-100x faster per search than reference.
+  * ``reference``  the pre-fastsim planner, verbatim: event-driven
+    simulator, uncached cost reads, single schedule, TFLOPs-derived
+    non-uniform heuristic only.  Kept as the baseline/oracle for
+    ``benchmarks/bench_planner.py`` and equivalence tests.
 
 The planner doubles as the fault-tolerance brain: on node loss, re-run
 ``search`` on the surviving ClusterSpec and reshard (train/trainer.py).
@@ -18,13 +34,16 @@ The planner doubles as the fault-tolerance brain: on node loss, re-run
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, List, Optional, Sequence, Tuple
+import math
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
-from repro.core import costmodel, segmentation
+from repro.core import costmodel, fastsim, segmentation
 from repro.core.cluster import ClusterSpec
 from repro.core.plan import ParallelPlan, StagePlacement
 from repro.core.predictor import PerformancePredictor, Prediction
 from repro.models.config import ModelConfig
+
+DEFAULT_EAGER_SLACKS = (1, 2, 4)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,6 +52,7 @@ class PlannerResult:
     prediction: Prediction
     evaluated: int
     log: Tuple[Tuple[str, float], ...]  # (plan description, iter_time)
+    pruned: int = 0   # candidates skipped by the lower-bound cutoff
 
 
 def _stage_groups(cluster: ClusterSpec, pp: int) -> Optional[List[int]]:
@@ -68,54 +88,201 @@ def _candidate_pps(cluster: ClusterSpec, n_layers: int,
     return sorted(opts)
 
 
+def _group_dp(cluster: ClusterSpec, groups: List[int], tp: int
+              ) -> Optional[List[int]]:
+    """Level 2: uniform DP inside each group (groups may differ:
+    microbatch sizes scale so token flow stays 1:1 per tick)."""
+    if any(g.accel_per_node % tp for g in cluster.groups):
+        return None
+    dp_g = []
+    for gi, g in enumerate(cluster.groups):
+        denom = tp * groups.count(gi)
+        if g.n_accel % denom:
+            return None
+        dp_g.append(g.n_accel // denom)
+    return dp_g
+
+
 def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
            seq_len: int, pp_options: Optional[Sequence[int]] = None,
            tp_options: Sequence[int] = (1, 2, 4, 8),
            micro_bs_options: Sequence[int] = (1, 2),
-           nonuniform: bool = True, schedule: str = "1f1b",
+           nonuniform: bool = True, schedule: str = "auto",
+           eager_slack_options: Sequence[int] = DEFAULT_EAGER_SLACKS,
            calibration: float = 1.0, require_fit: bool = True,
            include_tp_comm: bool = True,
-           cost_source: Optional[costmodel.CostSource] = None
-           ) -> PlannerResult:
+           cost_source: Optional[costmodel.CostSource] = None,
+           engine: str = "fast") -> PlannerResult:
     """DFS over the three-level tree; returns the min-iter-time plan.
 
     ``cost_source`` routes every leaf's scoring through measured costs
     (repro.profile.model.ProfiledCostModel) instead of the analytic model;
-    None keeps the analytic default."""
+    None keeps the analytic default.
+
+    ``schedule="auto"`` scores each split under strict 1f1b and 1f1b-eager
+    (sweeping ``eager_slack_options``) and bakes the winner into the
+    returned plan; pass an explicit schedule name to pin it."""
+    if engine == "reference":
+        return _search_reference(
+            cluster, cfg, global_batch=global_batch, seq_len=seq_len,
+            pp_options=pp_options, tp_options=tp_options,
+            micro_bs_options=micro_bs_options, nonuniform=nonuniform,
+            schedule="1f1b" if schedule == "auto" else schedule,
+            calibration=calibration, require_fit=require_fit,
+            include_tp_comm=include_tp_comm, cost_source=cost_source)
+    if engine != "fast":
+        raise ValueError(f"unknown planner engine {engine!r}")
+
+    src = costmodel.MemoizedCostSource(
+        cost_source or costmodel.AnalyticCostSource())
     pred = PerformancePredictor(cluster, cfg, calibration,
                                 include_tp_comm=include_tp_comm,
-                                cost_source=cost_source)
+                                cost_source=src, sim_engine="fast")
+    if schedule == "auto":
+        scheds: List[Tuple[str, int]] = [("1f1b", 2)]
+        scheds += [("1f1b-eager", k) for k in eager_slack_options]
+    elif schedule == "1f1b-eager":
+        # schedule pinned, slack still swept — slack is a tuning knob of
+        # the eager schedule, not a different schedule
+        scheds = [("1f1b-eager", k) for k in eager_slack_options]
+    else:
+        scheds = [(schedule, 2)]
+    L = cfg.num_layers
+
+    # ---- phase 1: enumerate candidate (placement, split) leaves cheaply,
+    # with a schedule-independent lower bound each (no simulation yet)
+    cands: List[Tuple[float, str, tuple, list, int]] = []
+    for pp in _candidate_pps(cluster, L, pp_options):                # level 1
+        groups = _stage_groups(cluster, pp)
+        if groups is None:
+            continue
+        for tp in tp_options:                                        # level 3
+            dp_g = _group_dp(cluster, groups, tp)                    # level 2
+            if dp_g is None:
+                continue
+            dp_st = [dp_g[groups[i]] for i in range(pp)]
+            for micro_bs in micro_bs_options:
+                # probe plan: tick/microbatch algebra lives in ONE place
+                # (ParallelPlan); layer counts do not enter it
+                probe = ParallelPlan(
+                    stages=tuple(
+                        StagePlacement(group=groups[i], n_layers=1,
+                                       dp=dp_st[i], tp=tp,
+                                       is_last=(i == pp - 1))
+                        for i in range(pp)),
+                    micro_bs=micro_bs, global_batch=global_batch,
+                    seq_len=seq_len)
+                if global_batch % probe.tokens_per_tick:
+                    continue
+                m = probe.micro_batches
+                mbs_st = [probe.stage_micro_bs(i) for i in range(pp)]
+                coeffs = [pred.stage_coeffs(
+                    groups[i], mbs_st[i], tp, dp_st[i], i == pp - 1,
+                    groups[i + 1] if i + 1 < pp else None, seq_len)
+                    for i in range(pp)]
+                # candidate splits (deduped; first tag wins)
+                splits: Dict[Tuple[int, ...], str] = {}
+                if nonuniform:
+                    # rule 1 on cost-source-derived per-stage per-layer
+                    # times: with a profile these are measured, closing
+                    # the nameplate-TFLOPs gap
+                    t_pl = [c.fwd_per_layer + c.bwd_per_layer
+                            for c in coeffs]
+                    offs = [c.fwd_const + c.bwd_const + c.send
+                            for c in coeffs]
+                    splits[tuple(segmentation.dp_split(L, t_pl, offs))] \
+                        = "dp"
+                    prop = segmentation.nonuniform_split(
+                        L, [1.0 / t for t in t_pl])
+                    prop = segmentation.rebalance(
+                        prop, [t * n for t, n in zip(t_pl, prop)])
+                    splits.setdefault(tuple(prop), "nonuniform")
+                splits.setdefault(tuple(segmentation.uniform_split(L, pp)),
+                                  "uniform")
+                for split, tag in splits.items():
+                    stages = tuple(
+                        StagePlacement(group=groups[i], n_layers=split[i],
+                                       dp=dp_st[i], tp=tp,
+                                       is_last=(i == pp - 1))
+                        for i in range(pp))
+                    timings = [c.timing(n) for c, n in zip(coeffs, split)]
+                    base = ParallelPlan(
+                        stages=stages, micro_bs=micro_bs,
+                        global_batch=global_batch, seq_len=seq_len)
+                    lb = fastsim.lower_bound(
+                        timings, m, pred.dp_allreduce_time(base))
+                    cands.append((lb, tag, stages, timings, micro_bs))
+
+    # ---- phase 2: best-first scoring with lower-bound pruning — sorting
+    # by bound finds a near-optimal plan early, after which candidates
+    # whose *bound* already exceeds it are provably non-winners
+    cands.sort(key=lambda c: c[0])
+    best: Optional[Tuple[Prediction, ParallelPlan]] = None
+    log: List[Tuple[str, float]] = []
+    evaluated = 0
+    pruned = 0
+    for lb, tag, stages, timings, micro_bs in cands:
+        if best is not None and lb >= best[0].iter_time:
+            pruned += 1
+            continue
+        for sched, slack in scheds:
+            if best is not None and lb >= best[0].iter_time:
+                break
+            plan = ParallelPlan(stages=stages, micro_bs=micro_bs,
+                                global_batch=global_batch, seq_len=seq_len,
+                                schedule=sched, eager_slack=slack)
+            p = pred.predict(plan, timings=timings)
+            evaluated += 1
+            log.append((f"{tag} {plan.describe()}", p.iter_time))
+            if require_fit and not p.fits:
+                continue
+            if best is None or p.iter_time < best[0].iter_time:
+                best = (p, plan)
+
+    if best is None:
+        raise RuntimeError("planner found no feasible plan (memory/divisibility)")
+    return PlannerResult(plan=best[1], prediction=best[0],
+                         evaluated=evaluated, log=tuple(log),
+                         pruned=pruned)
+
+
+# ---------------------------------------------------------------------------
+# Reference engine: the pre-fastsim planner, kept verbatim as the baseline
+# for benchmarks/bench_planner.py and the fast-vs-reference equivalence
+# tests.  Event-driven simulator, uncached cost reads, one schedule, and
+# the nameplate-TFLOPs non-uniform heuristic.
+# ---------------------------------------------------------------------------
+def _search_reference(cluster: ClusterSpec, cfg: ModelConfig, *,
+                      global_batch: int, seq_len: int,
+                      pp_options: Optional[Sequence[int]],
+                      tp_options: Sequence[int],
+                      micro_bs_options: Sequence[int],
+                      nonuniform: bool, schedule: str,
+                      calibration: float, require_fit: bool,
+                      include_tp_comm: bool,
+                      cost_source: Optional[costmodel.CostSource]
+                      ) -> PlannerResult:
+    pred = PerformancePredictor(cluster, cfg, calibration,
+                                include_tp_comm=include_tp_comm,
+                                cost_source=cost_source,
+                                sim_engine="reference")
     best: Optional[Tuple[Prediction, ParallelPlan]] = None
     log: List[Tuple[str, float]] = []
     evaluated = 0
 
-    for pp in _candidate_pps(cluster, cfg.num_layers, pp_options):   # level 1
+    for pp in _candidate_pps(cluster, cfg.num_layers, pp_options):  # level 1
         groups = _stage_groups(cluster, pp)
         if groups is None:
             continue
-        n_stages_in_group = [groups.count(gi)
-                             for gi in range(len(cluster.groups))]
         for tp in tp_options:                                        # level 3
-            if any(g.accel_per_node % tp for g in cluster.groups):
-                continue
-            # level 2: uniform DP inside each group (groups may differ:
-            # microbatch sizes scale so token flow stays 1:1 per tick)
-            dp_g = []
-            ok = True
-            for gi, g in enumerate(cluster.groups):
-                denom = tp * n_stages_in_group[gi]
-                if g.n_accel % denom:
-                    ok = False
-                    break
-                dp_g.append(g.n_accel // denom)
-            if not ok:
+            dp_g = _group_dp(cluster, groups, tp)                    # level 2
+            if dp_g is None:
                 continue
             for micro_bs in micro_bs_options:
-                import math
-                l = 1
+                lcm = 1
                 for d in dp_g:
-                    l = math.lcm(l, d)
-                tick = micro_bs * l
+                    lcm = math.lcm(lcm, d)
+                tick = micro_bs * lcm
                 if global_batch % tick:
                     continue
 
@@ -128,8 +295,8 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
                         for i in range(pp))
                     plan = ParallelPlan(stages=stages, micro_bs=micro_bs,
                                         global_batch=global_batch,
-                                        seq_len=seq_len)
-                    p = pred.predict(plan, schedule=schedule)
+                                        seq_len=seq_len, schedule=schedule)
+                    p = pred.predict(plan)
                     evaluated += 1
                     log.append((f"{tag} {plan.describe()}", p.iter_time))
                     if require_fit and not p.fits:

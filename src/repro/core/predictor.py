@@ -5,18 +5,49 @@ repro.profile.model.ProfiledCostModel) with the ICCL transport models and
 the workload simulator to predict iteration time, throughput (Eq.1 TGS),
 MFU (Eq.2) and peak memory for a candidate ParallelPlan on a ClusterSpec —
 without touching the cluster.
+
+Every stage's fwd/bwd time is *linear in its layer count*: measured
+per-layer wall time (or analytic per-layer FLOPs / effective TFLOP/s, plus
+per-layer TP all-reduce) times n_layers, plus a constant (last stage's
+unembedding); the boundary P2P send is layer-independent (paper Eq.3).
+``stage_coeffs`` exposes that linear form directly — the planner scores a
+new layer split as pp multiply-adds instead of re-deriving costs — and is
+cached per (group, micro_bs, tp, dp, is_last, next_group): the planner's
+leaves repeat a handful of such keys thousands of times.
+
+``sim_engine`` picks the pipeline simulator: "fast" routes through the
+vectorized recurrences in repro.core.fastsim, "reference" replays the
+event-driven oracle in repro.core.simulator (exact but O(m·pp²); kept for
+benchmarks and equivalence tests).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
-from repro.core import costmodel, simulator
+from repro.core import costmodel, fastsim, simulator
 from repro.core.cluster import ClusterSpec
 from repro.core.plan import ParallelPlan
 from repro.models.config import ModelConfig
 
 GBPS = 1e9 / 8.0  # Gb/s -> bytes/s
+
+
+@dataclasses.dataclass(frozen=True)
+class StageCoeffs:
+    """fwd = fwd_per_layer * n_layers + fwd_const (bwd likewise); ``send``
+    is the boundary P2P time to the next stage (0 for the last)."""
+    fwd_per_layer: float
+    fwd_const: float
+    bwd_per_layer: float
+    bwd_const: float
+    send: float
+
+    def timing(self, n_layers: int) -> simulator.StageTiming:
+        return simulator.StageTiming(
+            fwd=self.fwd_per_layer * n_layers + self.fwd_const,
+            bwd=self.bwd_per_layer * n_layers + self.bwd_const,
+            send=self.send)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,6 +60,8 @@ class Prediction:
     stage_times_fwd: Tuple[float, ...]
     peak_mem_gb: Tuple[float, ...]
     fits: bool
+    schedule: str = "1f1b"
+    eager_slack: int = 2
 
     @property
     def mfu_of_bound(self) -> float:
@@ -50,104 +83,158 @@ class PerformancePredictor:
 
     def __init__(self, cluster: ClusterSpec, cfg: ModelConfig,
                  calibration: float = 1.0, include_tp_comm: bool = True,
-                 cost_source: Optional[costmodel.CostSource] = None):
+                 cost_source: Optional[costmodel.CostSource] = None,
+                 sim_engine: str = "fast"):
+        if sim_engine not in ("fast", "reference"):
+            raise ValueError(f"unknown sim_engine {sim_engine!r}")
         self.cluster = cluster
         self.cfg = cfg
         self.calibration = calibration
         self.include_tp_comm = include_tp_comm
         self.src = cost_source or costmodel.AnalyticCostSource()
+        self.sim_engine = sim_engine
+        # reference mode re-derives every leaf from the cost source, like
+        # the pre-fastsim planner did — no coefficient caching
+        self._memo = sim_engine == "fast"
+        self._coeffs: Dict[tuple, StageCoeffs] = {}
+        self._dp_coeffs: Dict[tuple, float] = {}
 
     # ---------------------------------------------------------- pieces ----
-    def stage_timing(self, plan: ParallelPlan, i: int) -> simulator.StageTiming:
-        st = plan.stages[i]
-        g = self.cluster.groups[st.group]
-        mbs = plan.stage_micro_bs(i)
-        tokens = mbs * plan.seq_len
-        eff = g.device.effective_tflops * 1e12 * st.tp
+    def stage_coeffs(self, group: int, mbs: int, tp: int, dp: int,
+                     is_last: bool, next_group: Optional[int],
+                     seq_len: int, transport: str = "gpu") -> StageCoeffs:
+        key = (group, mbs, tp, dp, is_last, next_group, seq_len, transport)
+        if self._memo:
+            hit = self._coeffs.get(key)
+            if hit is not None:
+                return hit
+        g = self.cluster.groups[group]
+        tokens = mbs * seq_len
+        eff = g.device.effective_tflops * 1e12 * tp
         measured = self.src.layer_time(g.device.name, self.cfg,
-                                       plan.seq_len, mbs, st.tp)
+                                       seq_len, mbs, tp)
         if measured is not None:
             # profiled path: wall time per layer already includes TP comm
-            t_fwd = measured[0] * st.n_layers
-            t_bwd = measured[1] * st.n_layers
-            if st.is_last:
+            f_pl, b_pl = measured
+            f_c = b_c = 0.0
+            if is_last:
                 emb = self.src.embedding_flops(self.cfg) * tokens / eff
-                t_fwd += emb
-                t_bwd += 2.0 * emb
+                f_c, b_c = emb, 2.0 * emb
         else:
-            lc = self.src.layer_cost(self.cfg, plan.seq_len)
-            flops = lc.flops_fwd * st.n_layers * tokens
-            if st.is_last:
-                flops += self.src.embedding_flops(self.cfg) * tokens
+            lc = self.src.layer_cost(self.cfg, seq_len)
             # HLO-derived flops already embed the remat/redundancy factor
             # the scalar knob models — never apply both
-            cal = (1.0 if self.src.flops_calibrated(self.cfg, plan.seq_len)
+            cal = (1.0 if self.src.flops_calibrated(self.cfg, seq_len)
                    else self.calibration)
-            t_fwd = cal * flops / eff
+            f_pl = cal * lc.flops_fwd * tokens / eff
             # TP all-reduce: 2/layer fwd, ring factor 2(tp-1)/tp, NVLink-class
-            if st.tp > 1 and self.include_tp_comm:
-                vol = self.src.comm_volume(self.cfg, mbs, plan.seq_len,
-                                           st.n_layers, st.dp).tp_per_layer
-                ring = 2.0 * (st.tp - 1) / st.tp
-                t_fwd += st.n_layers * 2 * vol * ring / (g.intra_node_gbps
-                                                         * GBPS)
-            t_bwd = 2.0 * t_fwd
+            if tp > 1 and self.include_tp_comm:
+                vol = self.src.comm_volume(self.cfg, mbs, seq_len,
+                                           1, dp).tp_per_layer
+                ring = 2.0 * (tp - 1) / tp
+                f_pl += 2 * vol * ring / (g.intra_node_gbps * GBPS)
+            f_c = (cal * self.src.embedding_flops(self.cfg) * tokens / eff
+                   if is_last else 0.0)
+            b_pl, b_c = 2.0 * f_pl, 2.0 * f_c
         # P2P send to next stage (paper Eq.3 volume over the boundary link)
-        if i + 1 < plan.pp:
-            nxt = plan.stages[i + 1]
-            bw = self.src.link_gbps(self.cluster, st.group, nxt.group,
-                                    plan.transport)
-            vol = self.src.comm_volume(self.cfg, mbs, plan.seq_len,
-                                       st.n_layers, st.dp).pp_p2p
+        if next_group is not None:
+            bw = self.src.link_gbps(self.cluster, group, next_group,
+                                    transport)
+            vol = self.src.comm_volume(self.cfg, mbs, seq_len, 1, dp).pp_p2p
             send = vol / (bw * GBPS)
         else:
             send = 0.0
-        return simulator.StageTiming(fwd=t_fwd, bwd=t_bwd, send=send)
+        out = StageCoeffs(fwd_per_layer=f_pl, fwd_const=f_c,
+                          bwd_per_layer=b_pl, bwd_const=b_c, send=send)
+        if self._memo:
+            self._coeffs[key] = out
+        return out
+
+    def plan_coeffs(self, plan: ParallelPlan) -> List[StageCoeffs]:
+        return [self.stage_coeffs(
+            st.group, plan.stage_micro_bs(i), st.tp, st.dp, st.is_last,
+            plan.stages[i + 1].group if i + 1 < plan.pp else None,
+            plan.seq_len, plan.transport)
+            for i, st in enumerate(plan.stages)]
+
+    def stage_timing(self, plan: ParallelPlan, i: int) -> simulator.StageTiming:
+        st = plan.stages[i]
+        return self.stage_coeffs(
+            st.group, plan.stage_micro_bs(i), st.tp, st.dp, st.is_last,
+            plan.stages[i + 1].group if i + 1 < plan.pp else None,
+            plan.seq_len, plan.transport).timing(st.n_layers)
+
+    def _dp_coeff(self, group: int, tp: int, dp: int,
+                  seq_len: int, transport: str) -> float:
+        """Per-layer gradient all-reduce seconds for a stage placement."""
+        key = (group, tp, dp, seq_len, transport)
+        if self._memo:
+            hit = self._dp_coeffs.get(key)
+            if hit is not None:
+                return hit
+        lc = self.src.layer_cost(self.cfg, seq_len)
+        bw = self.src.link_gbps(self.cluster, group, group, transport)
+        out = (lc.param_bytes / tp) * 2.0 * (dp - 1) / dp / (bw * GBPS)
+        if self._memo:
+            self._dp_coeffs[key] = out
+        return out
 
     def dp_allreduce_time(self, plan: ParallelPlan) -> float:
         if plan.dp <= 1:
             return 0.0
-        times = []
-        lc = self.src.layer_cost(self.cfg, plan.seq_len)
-        for st in plan.stages:
-            vol = (lc.param_bytes * st.n_layers / st.tp) \
-                * 2.0 * (st.dp - 1) / st.dp
-            bw = self.src.link_gbps(self.cluster, st.group, st.group,
-                                    plan.transport)
-            times.append(vol / (bw * GBPS))
-        return max(times)
+        return max(self._dp_coeff(st.group, st.tp, st.dp, plan.seq_len,
+                                  plan.transport) * st.n_layers
+                   for st in plan.stages)
 
-    def peak_memory(self, plan: ParallelPlan) -> Tuple[float, ...]:
+    def peak_memory(self, plan: ParallelPlan,
+                    schedule: Optional[str] = None,
+                    eager_slack: Optional[int] = None) -> Tuple[float, ...]:
+        schedule = schedule if schedule is not None else plan.schedule
+        eager_slack = (eager_slack if eager_slack is not None
+                       else plan.eager_slack)
         lc = self.src.layer_cost(self.cfg, plan.seq_len)
         out = []
         for i, st in enumerate(plan.stages):
             params = lc.param_bytes * st.n_layers / st.tp
             opt = params * (6.0 + 2.0 / st.dp)  # fp32 master+m+v ZeRO-1-ish
-            n_mb = simulator.peak_activation_microbatches(i, plan.pp,
-                                                          plan.micro_batches)
+            n_mb = simulator.peak_activation_microbatches(
+                i, plan.pp, plan.micro_batches, schedule, eager_slack)
             acts = (lc.act_bytes_per_token * plan.stage_micro_bs(i)
                     * plan.seq_len * st.n_layers / st.tp) * n_mb
             out.append((params + opt + acts) / 1e9)
         return tuple(out)
 
     # ----------------------------------------------------------- predict --
-    def predict(self, plan: ParallelPlan, schedule: str = "1f1b",
-                overlap_dp: bool = True) -> Prediction:
-        timings = [self.stage_timing(plan, i) for i in range(plan.pp)]
-        rep = simulator.simulate(timings, plan.micro_batches, schedule,
-                                 dp_allreduce=self.dp_allreduce_time(plan),
-                                 overlap_dp=overlap_dp)
+    def predict(self, plan: ParallelPlan, schedule: Optional[str] = None,
+                overlap_dp: bool = True,
+                eager_slack: Optional[int] = None,
+                timings: Optional[List[simulator.StageTiming]] = None
+                ) -> Prediction:
+        """``schedule``/``eager_slack`` default to the plan's own; pass
+        ``timings`` (from ``plan_coeffs``) to skip rebuilding them when
+        scoring one split under several schedules."""
+        schedule = schedule if schedule is not None else plan.schedule
+        eager_slack = (eager_slack if eager_slack is not None
+                       else plan.eager_slack)
+        if timings is None:
+            timings = [self.stage_timing(plan, i) for i in range(plan.pp)]
+        sim = (fastsim.simulate if self.sim_engine == "fast"
+               else simulator.simulate)
+        rep = sim(timings, plan.micro_batches, schedule,
+                  dp_allreduce=self.dp_allreduce_time(plan),
+                  overlap_dp=overlap_dp, eager_slack=eager_slack)
         S = plan.n_accel
         tokens = plan.global_batch * plan.seq_len
         tgs = tokens / (S * rep.iter_time)               # Eq.1
         model_flops = self.cfg.flops_per_token(plan.seq_len) * 3.0  # fwd+bwd
         tested_tflops = tokens * model_flops / (rep.iter_time * S) / 1e12
         mfu = tested_tflops / self.cluster.peak_tflops_mean   # Eq.2
-        mems = self.peak_memory(plan)
+        mems = self.peak_memory(plan, schedule, eager_slack)
         fits = all(m < self.cluster.groups[st.group].device.hbm_gb
                    for m, st in zip(mems, plan.stages))
         return Prediction(iter_time=rep.iter_time, tgs=tgs, mfu=mfu,
                           theoretical_mfu=self.cluster.theoretical_mfu,
                           bubble_frac=rep.bubble_frac,
                           stage_times_fwd=tuple(t.fwd for t in timings),
-                          peak_mem_gb=mems, fits=fits)
+                          peak_mem_gb=mems, fits=fits,
+                          schedule=schedule, eager_slack=eager_slack)

@@ -4,10 +4,20 @@ Non-uniform segmentation assigns layers proportionally to each stage's
 *compute speed* (accelerators-per-stage x per-accelerator effective TFLOPs),
 so faster stages hold more layers — e.g. the paper's `766667777777` split of
 80 layers over PP=12 on the AMD+C cluster.
+
+``dp_split`` is the exact optimizer over the same space: it minimizes the
+bottleneck per-stage time (per-layer compute time x layers + constant
+offsets such as the boundary P2P send and the last stage's unembedding),
+fed with per-stage per-layer times from whatever ``CostSource`` the planner
+is running — so with a measured profile the split reacts to real kernel
+behaviour rather than nameplate TFLOPs.
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+import heapq
+from typing import List, Optional, Sequence
+
+import numpy as np
 
 
 def uniform_split(n_layers: int, pp: int) -> List[int]:
@@ -35,6 +45,61 @@ def nonuniform_split(n_layers: int, speeds: Sequence[float]) -> List[int]:
     for i in range(rem):
         base[order[i % pp]] += 1
     return base
+
+
+def dp_split(n_layers: int, per_layer: Sequence[float],
+             offsets: Optional[Sequence[float]] = None,
+             max_layers: Optional[Sequence[int]] = None) -> List[int]:
+    """Exact min-bottleneck layer assignment over pp pipeline stages.
+
+    Minimizes ``max_i(split[i] * per_layer[i] + offsets[i])`` subject to
+    ``sum(split) == n_layers``, ``1 <= split[i] <= max_layers[i]``.  The
+    optimal bottleneck is always some stage's cost at an integer layer
+    count, so binary-search the sorted candidate set
+    ``{l * t_i + o_i : 1 <= l <= L}`` with a greedy feasibility check
+    (capacity fill): T is feasible iff every stage can hold >= 1 layer
+    under T and the capacities sum to >= n_layers.
+
+    Within the optimal bottleneck, remaining layers go greedily to the
+    stage whose next-layer cost is lowest, so secondary stages stay
+    balanced too (the pipeline's non-bottleneck bubble shrinks).
+    """
+    pp = len(per_layer)
+    assert n_layers >= pp, "need at least one layer per stage"
+    t = np.asarray(per_layer, dtype=float)
+    o = (np.zeros(pp) if offsets is None
+         else np.asarray(offsets, dtype=float))
+    assert np.all(t > 0), "per-layer times must be positive"
+    hi = (np.full(pp, n_layers) if max_layers is None
+          else np.minimum(np.asarray(max_layers), n_layers))
+    assert np.all(hi >= 1) and hi.sum() >= n_layers, \
+        "max_layers admits no feasible split"
+
+    def caps(T: float) -> np.ndarray:
+        # 1e-12 relative slop: T is itself a candidate l*t+o and must
+        # admit that very l despite float roundoff
+        c = np.floor((T - o) / t * (1 + 1e-12) + 1e-12).astype(int)
+        return np.minimum(np.maximum(c, 0), hi)
+
+    cand = np.unique((np.arange(1, n_layers + 1)[:, None] * t + o).ravel())
+    lo_i, hi_i = 0, len(cand) - 1
+    while lo_i < hi_i:                      # smallest feasible bottleneck
+        mid = (lo_i + hi_i) // 2
+        c = caps(cand[mid])
+        if c.min() >= 1 and c.sum() >= n_layers:
+            hi_i = mid
+        else:
+            lo_i = mid + 1
+    cap = caps(cand[lo_i])
+    split = [1] * pp
+    heap = [(2 * t[i] + o[i], i) for i in range(pp) if cap[i] > 1]
+    heapq.heapify(heap)
+    for _ in range(n_layers - pp):
+        cost, i = heapq.heappop(heap)
+        split[i] += 1
+        if split[i] < cap[i]:
+            heapq.heappush(heap, ((split[i] + 1) * t[i] + o[i], i))
+    return split
 
 
 def rebalance(split: List[int], stage_times: Sequence[float],

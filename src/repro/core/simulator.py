@@ -14,6 +14,11 @@ Schedules:
 
 The simulation is greedy event-driven list scheduling over the op DAG and is
 exact for the given per-op times.
+
+This module is the REFERENCE ORACLE: O(m·pp²) and deliberately simple.
+The planner's hot path scores plans through repro.core.fastsim, whose
+vectorized recurrences / bounded-lookahead event loop are asserted exact
+against this implementation (tests/test_fastsim.py).
 """
 from __future__ import annotations
 

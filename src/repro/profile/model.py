@@ -110,7 +110,20 @@ class ProfiledCostModel:
                  "micro_bs": micro_bs, "tp": tp}
         fwd = self._interp(dev, "layer_step", shape, "fwd_s")
         bwd = self._interp(dev, "layer_step", shape, "bwd_s")
-        if fwd is None or bwd is None:
-            return self.fallback.layer_time(device_kind, cfg, seq_len,
-                                            micro_bs, tp)
-        return fwd, bwd
+        if fwd is not None and bwd is not None:
+            return fwd, bwd
+        # online refinement fallback: the Trainer folds whole observed step
+        # wall-times as per-layer per-sequence ``observed_layer_step``
+        # entries (a step observation cannot separate microbatch sizes).
+        # Scale linearly to the queried micro_bs and split fwd:bwd 1:2 —
+        # the ratio the analytic model and the microbench runner both use —
+        # so replan searches run on observed reality before a dedicated
+        # sweep exists.
+        per_seq = self._interp(dev, "observed_layer_step",
+                               {"arch": cfg.name, "seq_len": seq_len,
+                                "tp": tp}, "per_seq_s")
+        if per_seq is not None:
+            step = per_seq * micro_bs
+            return step / 3.0, 2.0 * step / 3.0
+        return self.fallback.layer_time(device_kind, cfg, seq_len,
+                                        micro_bs, tp)

@@ -46,6 +46,11 @@ class TrainerConfig:
     straggler_factor: float = 1.5
     straggler_patience: int = 5
     tp: int = 1
+    # replan uses the accumulating online profile as the planner's cost
+    # source once it holds at least this many folded layer-time
+    # observations (density threshold: a couple of steps is noise, not a
+    # profile)
+    replan_profile_min_obs: float = 8.0
 
 
 class Trainer:
@@ -168,17 +173,57 @@ class Trainer:
         shape = {"arch": cfgm.name, "seq_len": self.cfg.seq_len,
                  "global_batch": self.cfg.global_batch, "tp": self.cfg.tp}
         self.profile_store.fold(dev, "observed_step", shape, "time_s", dt)
+        # per-layer per-SEQUENCE time: a whole-step observation cannot
+        # separate microbatch sizes, so normalize by the batch and let the
+        # cost model scale linearly to the queried micro_bs
         self.profile_store.fold(
             dev, "observed_layer_step",
             {"arch": cfgm.name, "seq_len": self.cfg.seq_len,
-             "micro_bs": self.cfg.global_batch, "tp": self.cfg.tp},
-            "step_s", dt / max(cfgm.num_layers, 1))
+             "tp": self.cfg.tp},
+            "per_seq_s", dt / (max(cfgm.num_layers, 1)
+                               * self.cfg.global_batch))
+
+    def _profiled_cost_source(self, cluster: ClusterSpec):
+        """The online profile as a planner cost source — once it is dense
+        enough to trust (ROADMAP: profile-aware replan).
+
+        Returns None below ``replan_profile_min_obs`` folded layer-time
+        observations.  Every cluster device maps to this host's device
+        kind: the observing host stands in for the whole cluster, the
+        paper's profile-a-sample-predict-the-cluster methodology (a real
+        multi-island deployment folds per-island kinds instead)."""
+        store = self.profile_store
+        if store is None:
+            return None
+        # count only observations the replan search can actually consume:
+        # entries for the trained architecture (a stale profile for some
+        # other model must not open the gate)
+        obs = [e for e in (store.entries(op="observed_layer_step")
+                           + store.entries(op="layer_step"))
+               if e.shape.get("arch") == self.bundle.cfg.name]
+        if sum(e.value.get("n", 1.0) for e in obs) < \
+                self.cfg.replan_profile_min_obs:
+            return None
+        from repro.profile.model import ProfiledCostModel
+        from repro.profile.runner import device_kind
+        dev = device_kind()
+        return ProfiledCostModel(
+            store, device_map={g.device.name: dev for g in cluster.groups})
 
     # ------------------------------------------- elastic replan (HETHUB) --
     def replan(self, new_cluster: ClusterSpec, *, global_batch: int,
                seq_len: int, **search_kw):
         """Node failure / elastic scale event: search a new plan on the
-        surviving cluster, checkpoint-now, rebuild, reshard, resume."""
+        surviving cluster, checkpoint-now, rebuild, reshard, resume.
+
+        When the trainer has been folding observed step times into its
+        ``profile_store``, the search runs against them (measured costs)
+        instead of the analytic model — unless the caller passes an
+        explicit ``cost_source``."""
+        if "cost_source" not in search_kw:
+            src = self._profiled_cost_source(new_cluster)
+            if src is not None:
+                search_kw["cost_source"] = src
         result = planner_mod.search(new_cluster, self.bundle.cfg,
                                     global_batch=global_batch,
                                     seq_len=seq_len, **search_kw)

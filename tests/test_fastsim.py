@@ -1,0 +1,203 @@
+"""Fast planner stack: fastsim-vs-oracle equivalence, lower-bound
+validity, exact DP segmentation, memoization transparency, and the fast
+planner engine's speed/quality contract against the reference engine."""
+import itertools
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.llama2_paper import LLAMA2_70B
+from repro.core import cluster as C
+from repro.core import costmodel, fastsim, planner, segmentation, simulator
+from repro.core.simulator import StageTiming
+
+SCHEDULES = ("1f1b", "gpipe", "1f1b-eager")
+
+
+def _rand_timings(rng, pp):
+    return [StageTiming(rng.uniform(0.05, 3.0), rng.uniform(0.05, 5.0),
+                        rng.choice([0.0, rng.uniform(0.0, 1.5)]))
+            for _ in range(pp)]
+
+
+# ----------------------------------------------- fastsim == event oracle --
+def test_fastsim_matches_oracle_seeded():
+    """Deterministic randomized sweep (runs even without hypothesis)."""
+    rng = random.Random(0)
+    for _ in range(150):
+        pp = rng.randint(1, 7)
+        m = rng.randint(1, 14)
+        slack = rng.choice([0, 1, 2, 4])
+        t = _rand_timings(rng, pp)
+        dp = rng.choice([0.0, rng.uniform(0.0, 2.0)])
+        overlap = rng.choice([True, False])
+        for sch in SCHEDULES:
+            a = simulator.simulate(t, m, sch, dp_allreduce=dp,
+                                   overlap_dp=overlap, eager_slack=slack)
+            f = fastsim.simulate(t, m, sch, dp_allreduce=dp,
+                                 overlap_dp=overlap, eager_slack=slack)
+            assert a.iter_time == pytest.approx(f.iter_time, rel=1e-9), \
+                (sch, pp, m, slack)
+            assert a.bubble_frac == pytest.approx(f.bubble_frac, rel=1e-6)
+            assert a.stage_busy == pytest.approx(f.stage_busy)
+
+
+@given(st.integers(1, 6), st.integers(1, 10), st.integers(0, 4),
+       st.lists(st.tuples(st.floats(0.05, 3.0), st.floats(0.05, 5.0),
+                          st.floats(0.0, 1.0)), min_size=1, max_size=6),
+       st.sampled_from(SCHEDULES))
+@settings(max_examples=120, deadline=None)
+def test_fastsim_matches_oracle_property(pp, m, slack, raw, sch):
+    timings = [StageTiming(f, b, s) for f, b, s in (raw * pp)[:pp]]
+    a = simulator.simulate(timings, m, sch, eager_slack=slack)
+    f = fastsim.simulate(timings, m, sch, eager_slack=slack)
+    assert a.iter_time == pytest.approx(f.iter_time, rel=1e-9)
+
+
+def test_fastsim_wavefront_matches_scalar():
+    """The numpy slot-wavefront and the scalar strict recurrence are the
+    same algorithm; the public dispatch picks by pp."""
+    import numpy as np
+    rng = random.Random(3)
+    for _ in range(60):
+        pp = rng.randint(1, 9)
+        m = rng.randint(1, 12)
+        f = np.array([rng.uniform(0.05, 3.0) for _ in range(pp)])
+        b = np.array([rng.uniform(0.05, 5.0) for _ in range(pp)])
+        s = np.array([rng.uniform(0.0, 1.5) for _ in range(pp)])
+        F1, B1 = fastsim._1f1b_strict(f, b, s, m)
+        F2, B2 = fastsim._1f1b_strict_scalar(f, b, s, m)
+        assert np.allclose(F1, F2, rtol=1e-12)
+        assert np.allclose(B1, B2, rtol=1e-12)
+
+
+def test_fastsim_closed_form_and_unknown_schedule():
+    t = [StageTiming(1.0, 2.0, 0.0)] * 4
+    for sch in SCHEDULES:
+        assert fastsim.simulate(t, 16, sch).iter_time == \
+            pytest.approx((16 + 3) * 3.0)
+    with pytest.raises(ValueError, match="schedule"):
+        fastsim.simulate(t, 4, "interleaved")
+
+
+def test_lower_bound_valid_and_tight():
+    rng = random.Random(7)
+    for _ in range(80):
+        pp = rng.randint(1, 6)
+        m = rng.randint(1, 10)
+        t = _rand_timings(rng, pp)
+        dp = rng.choice([0.0, rng.uniform(0.0, 2.0)])
+        lb = fastsim.lower_bound(t, m, dp)
+        for sch in SCHEDULES:
+            for slack in (0, 2, 5):
+                r = simulator.simulate(t, m, sch, dp_allreduce=dp,
+                                       eager_slack=slack)
+                assert r.iter_time >= lb - 1e-9
+    # exactly tight for uniform stages, no sends, strict 1f1b
+    t = [StageTiming(1.0, 2.0, 0.0)] * 5
+    assert fastsim.lower_bound(t, 8) == pytest.approx((8 + 4) * 3.0)
+
+
+# -------------------------------------------------------------- dp_split --
+def _brute_bottleneck(L, t, o):
+    best = None
+    for comp in itertools.product(range(1, L + 1), repeat=len(t)):
+        if sum(comp) != L:
+            continue
+        cost = max(l * ti + oi for l, ti, oi in zip(comp, t, o))
+        best = cost if best is None else min(best, cost)
+    return best
+
+
+def test_dp_split_optimal_brute_force():
+    rng = random.Random(42)
+    for _ in range(150):
+        pp = rng.randint(2, 4)
+        L = rng.randint(pp, 10)
+        t = [rng.uniform(0.1, 3.0) for _ in range(pp)]
+        o = [rng.choice([0.0, rng.uniform(0.0, 2.0)]) for _ in range(pp)]
+        split = segmentation.dp_split(L, t, o)
+        assert sum(split) == L and all(x >= 1 for x in split)
+        got = max(l * ti + oi for l, ti, oi in zip(split, t, o))
+        assert got == pytest.approx(_brute_bottleneck(L, t, o))
+
+
+def test_dp_split_constraints():
+    s = segmentation.dp_split(10, [1.0, 1.0, 1.0], max_layers=[2, 10, 10])
+    assert s[0] <= 2 and sum(s) == 10
+    # heavily offset stage gets the minimum
+    s = segmentation.dp_split(12, [1.0, 1.0, 1.0], [50.0, 0.0, 0.0])
+    assert s[0] == 1
+    with pytest.raises(AssertionError):
+        segmentation.dp_split(2, [1.0, 1.0, 1.0])
+
+
+# ------------------------------------------------------- memoized source --
+def test_memoized_cost_source_transparent():
+    src = costmodel.MemoizedCostSource(costmodel.AnalyticCostSource())
+    cl = C.paper_cluster_of_size(12)
+    for _ in range(2):  # second round served from cache
+        lc = src.layer_cost(LLAMA2_70B, 4096)
+        assert lc == costmodel.layer_cost(LLAMA2_70B, 4096)
+        assert src.embedding_flops(LLAMA2_70B) == \
+            costmodel.embedding_flops(LLAMA2_70B)
+        cv = src.comm_volume(LLAMA2_70B, 1, 4096, 7, 8)
+        assert cv == costmodel.comm_volume(LLAMA2_70B, 1, 4096, 7, 8)
+        assert src.link_gbps(cl, 0, 1) == cl.link_gbps(0, 1)
+        assert src.layer_time("amd", LLAMA2_70B, 4096, 1, 8) is None
+        assert not src.flops_calibrated(LLAMA2_70B, 4096)
+    assert len(src._cache) == 6
+
+
+# ------------------------------------------------------- planner engines --
+def test_planner_fast_no_worse_than_reference():
+    """Same search, pinned schedule: the fast engine's candidate set is a
+    superset of the reference's, so its best plan can only be better."""
+    cl = C.paper_cluster_of_size(96)
+    # include_tp_comm=False makes the fast engine's cost-derived per-layer
+    # times exactly proportional to the reference's nameplate speeds, so
+    # its candidate-split set provably contains the reference's
+    kw = dict(global_batch=320, seq_len=4096, pp_options=[10, 12],
+              tp_options=[8], micro_bs_options=[1], require_fit=False,
+              schedule="1f1b", include_tp_comm=False)
+    fast = planner.search(cl, LLAMA2_70B, engine="fast", **kw)
+    ref = planner.search(cl, LLAMA2_70B, engine="reference", **kw)
+    assert fast.prediction.iter_time <= ref.prediction.iter_time * (1 + 1e-9)
+    assert fast.plan.schedule == "1f1b"
+    with pytest.raises(ValueError, match="engine"):
+        planner.search(cl, LLAMA2_70B, engine="warp", **kw)
+
+
+def test_planner_auto_schedule_selection():
+    """schedule='auto' scores 1f1b + an eager-slack sweep per split and
+    bakes the winner into the plan; the winner must be at least as good as
+    the same plan scored under strict 1f1b."""
+    cl = C.paper_cluster_of_size(96)
+    res = planner.search(cl, LLAMA2_70B, global_batch=320, seq_len=4096,
+                         pp_options=[12], tp_options=[8],
+                         micro_bs_options=[1], require_fit=False)
+    assert res.plan.schedule in ("1f1b", "1f1b-eager")
+    assert res.prediction.schedule == res.plan.schedule
+    from repro.core.predictor import PerformancePredictor
+    pred = PerformancePredictor(
+        cl, LLAMA2_70B,
+        cost_source=costmodel.MemoizedCostSource(
+            costmodel.AnalyticCostSource()))
+    strict = pred.predict(res.plan, schedule="1f1b")
+    assert res.prediction.iter_time <= strict.iter_time * (1 + 1e-9)
+
+
+def test_planner_prunes_but_keeps_winner():
+    """Pruning only drops provably-worse candidates: the returned best is
+    identical with pruning inactive (single-candidate searches) vs the
+    full sweep."""
+    cl = C.paper_cluster_of_size(96)
+    kw = dict(global_batch=320, seq_len=4096, tp_options=[8],
+              micro_bs_options=[1], require_fit=False)
+    full = planner.search(cl, LLAMA2_70B, pp_options=[6, 10, 12], **kw)
+    assert full.pruned > 0                  # the sweep actually pruned
+    singles = [planner.search(cl, LLAMA2_70B, pp_options=[p], **kw)
+               for p in (6, 10, 12)]
+    best_single = min(s.prediction.iter_time for s in singles)
+    assert full.prediction.iter_time == pytest.approx(best_single, rel=1e-12)

@@ -258,6 +258,67 @@ def test_trainer_folds_observed_steps(tmp_path):
     assert (tmp_path / "online.json").exists()   # persisted at end of run
 
 
+# ------------------------------------------------- profile-aware replan ----
+def test_replan_uses_profiled_cost_source(tmp_path, monkeypatch):
+    """ROADMAP item: once the online profile is dense enough, replan
+    searches run against it (ProfiledCostModel) instead of the analytic
+    model; an explicit cost_source from the caller always wins."""
+    from repro.models import registry
+    from repro.profile.runner import device_kind
+    from repro.train import trainer as trainer_mod
+    from repro.train.trainer import Trainer, TrainerConfig
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    b = registry.get_bundle("llama3-8b", smoke=True)
+    store = ProfileStore(tmp_path / "online.json")
+    t = Trainer(b, mesh, TrainerConfig(global_batch=4, seq_len=32,
+                                       ckpt_dir=str(tmp_path / "ckpt"),
+                                       ckpt_every=100,
+                                       replan_profile_min_obs=8),
+                profile_store=store)
+    captured = {}
+
+    def fake_search(cluster, cfg, **kw):
+        captured.clear()
+        captured.update(kw)
+
+        class R:
+            plan = None
+        return R()
+
+    monkeypatch.setattr(trainer_mod.planner_mod, "search", fake_search)
+    cl = C.paper_cluster_of_size(12)
+    # sparse store (below the density threshold): analytic replan
+    t.replan(cl, global_batch=96, seq_len=32)
+    assert "cost_source" not in captured
+    # a dense profile for some OTHER model must not open the gate
+    dev = device_kind()
+    for _ in range(20):
+        store.fold(dev, "observed_layer_step",
+                   {"arch": "other-model", "seq_len": 32, "tp": 1},
+                   "per_seq_s", 1e-4)
+    t.replan(cl, global_batch=96, seq_len=32)
+    assert "cost_source" not in captured
+    # fold enough observed step times to cross the threshold
+    shape = {"arch": b.cfg.name, "seq_len": 32, "tp": 1}
+    for _ in range(8):
+        store.fold(dev, "observed_layer_step", shape, "per_seq_s",
+                   0.12 / (4 * max(b.cfg.num_layers, 1)))
+    t.replan(cl, global_batch=96, seq_len=32)
+    src = captured.get("cost_source")
+    assert isinstance(src, ProfiledCostModel)
+    # the observed entries serve layer times for every cluster device name,
+    # scaled linearly to the queried microbatch size
+    for g in cl.groups:
+        lt = src.layer_time(g.device.name, b.cfg, 32, 4, 1)
+        assert lt is not None and lt[0] > 0 and lt[1] == pytest.approx(
+            2.0 * lt[0])
+        lt2 = src.layer_time(g.device.name, b.cfg, 32, 8, 1)
+        assert lt2[0] == pytest.approx(2.0 * lt[0])
+    # caller-provided cost_source is never overridden
+    t.replan(cl, global_batch=96, seq_len=32, cost_source=None)
+    assert captured["cost_source"] is None
+
+
 # ----------------------------------------------------------------- runner --
 def test_runner_quick_writes_profile(tmp_path):
     """The measured path end-to-end in-process: tiny sweep -> store ->
