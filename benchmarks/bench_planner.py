@@ -13,14 +13,20 @@ best predicted iter_time no worse than the reference's (its candidate set
 and schedule sweep are supersets).
 
     PYTHONPATH=src:. python benchmarks/bench_planner.py [--quick]
+        [--schedules auto|LIST]
         [--check-baseline benchmarks/BENCH_planner.baseline.json]
         [--write-baseline] [--record]
 
-``--quick`` shrinks the sweep for CI; ``--check-baseline`` exits 1 when
-the fast/reference wall-time ratio regresses more than 2x over the
-committed baseline (``--factor`` to override; the ratio cancels machine
-speed); ``--record`` snapshots the run to the *tracked*
-``benchmarks/BENCH_planner.json`` — the repo's perf trajectory.
+``--quick`` shrinks the sweep for CI; ``--schedules`` restricts the fast
+engine's schedule sweep — ``auto`` (default) scores 1f1b, 1f1b-eager,
+gpipe and interleaved-1f1b x vpp per split, while a comma list (e.g.
+``--schedules 1f1b,interleaved-1f1b``) searches each named schedule and
+keeps the best (the reference engine always runs its single pinned
+1f1b); ``--check-baseline`` exits 1 when the fast/reference wall-time
+ratio regresses more than 2x over the committed baseline (``--factor``
+to override; the ratio cancels machine speed); ``--record`` snapshots
+the run to the *tracked* ``benchmarks/BENCH_planner.json`` — the repo's
+perf trajectory.
 """
 from __future__ import annotations
 
@@ -51,26 +57,37 @@ def search_args(quick: bool) -> dict:
                 include_tp_comm=False)
 
 
-def run_engine(cluster, engine: str, kw: dict) -> dict:
+def run_engine(cluster, engine: str, kw: dict,
+               schedules=("auto",)) -> dict:
     t0 = time.perf_counter()
-    res = planner.search(cluster, LLAMA2_140B, engine=engine, **kw)
+    if engine == "reference" or list(schedules) == ["auto"]:
+        res = planner.search(cluster, LLAMA2_140B, engine=engine, **kw)
+        evaluated = res.evaluated
+    else:
+        # restricted sweep: one pinned search per schedule, best wins
+        results = [planner.search(cluster, LLAMA2_140B, engine=engine,
+                                  schedule=s, **kw) for s in schedules]
+        res = min(results, key=lambda r: r.prediction.iter_time)
+        evaluated = sum(r.evaluated for r in results)
     wall = time.perf_counter() - t0
     return {
         "engine": engine,
         "wall_s": round(wall, 4),
-        "evaluated": res.evaluated,
+        "evaluated": evaluated,
         "iter_time_s": res.prediction.iter_time,
         "schedule": res.plan.schedule,
         "eager_slack": res.plan.eager_slack,
+        "vpp": res.plan.vpp,
         "plan": res.plan.describe(),
         "layers": list(res.plan.layers),
     }
 
 
-def run(quick: bool = False, verbose: bool = True) -> dict:
+def run(quick: bool = False, verbose: bool = True,
+        schedules=("auto",)) -> dict:
     cluster = hetero_cluster(96)          # 96 nodes = 768 accelerators
     kw = search_args(quick)
-    fast = run_engine(cluster, "fast", kw)
+    fast = run_engine(cluster, "fast", kw, schedules)
     ref = run_engine(cluster, "reference", kw)
     speedup = ref["wall_s"] / fast["wall_s"]
     doc = {
@@ -78,6 +95,7 @@ def run(quick: bool = False, verbose: bool = True) -> dict:
         "model": LLAMA2_140B.name,
         "cluster": "paper-96N768D (128 AMD + 640 GPU-A)",
         "quick": quick,
+        "schedules": list(schedules),
         "args": {k: v for k, v in kw.items()},
         "fast": fast,
         "reference": ref,
@@ -116,11 +134,12 @@ def check_baseline(doc: dict, path: Path, factor: float) -> bool:
     machine, so the ratio cancels machine speed and isolates fast-engine
     regressions."""
     base = json.loads(path.read_text())
-    if base.get("quick") != doc.get("quick"):
-        print("  FAIL: baseline and run use different sweeps "
-              f"(baseline quick={base.get('quick')}, run "
-              f"quick={doc.get('quick')}) — regenerate the baseline")
-        return False
+    for key in ("quick", "schedules"):
+        if base.get(key) != doc.get(key):
+            print("  FAIL: baseline and run use different sweeps "
+                  f"(baseline {key}={base.get(key)}, run "
+                  f"{key}={doc.get(key)}) — regenerate the baseline")
+            return False
     base_ratio = base["fast"]["wall_s"] / base["reference"]["wall_s"]
     got_ratio = doc["fast"]["wall_s"] / doc["reference"]["wall_s"]
     allowed = base_ratio * factor
@@ -137,6 +156,10 @@ def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="smaller sweep (CI)")
+    ap.add_argument("--schedules", default="auto",
+                    help="'auto' (full sweep incl. interleaved) or a "
+                         "comma list of schedules to pin, e.g. "
+                         "'1f1b,interleaved-1f1b'")
     ap.add_argument("--check-baseline", type=Path, default=None,
                     help="fail on wall-time regression vs this baseline")
     ap.add_argument("--factor", type=float, default=2.0,
@@ -146,12 +169,14 @@ def main() -> int:
     ap.add_argument("--record", action="store_true",
                     help=f"snapshot the run to the tracked {RECORD.name}")
     args = ap.parse_args()
-    doc = run(quick=args.quick)
+    doc = run(quick=args.quick,
+              schedules=tuple(args.schedules.split(",")))
     ok = doc["ok"]
     if args.write_baseline:
         BASELINE.write_text(json.dumps(
-            {k: doc[k] for k in ("bench", "model", "quick", "fast",
-                                 "reference", "speedup")}, indent=1))
+            {k: doc[k] for k in ("bench", "model", "quick", "schedules",
+                                 "fast", "reference", "speedup")},
+            indent=1))
         print(f"  wrote {BASELINE}")
     if args.record:
         RECORD.write_text(json.dumps(doc, indent=1))

@@ -20,11 +20,15 @@ GPUA = C.DeviceType("gpu-a", peak_tflops=280.0, mfu=48.08 / 280.0)
 cluster = C.ClusterSpec(groups=(C.NodeGroup(AMD, 16), C.NodeGroup(GPUA, 80)))
 
 # schedule="auto" (default): every surviving split is scored under strict
-# 1f1b and a 1f1b-eager slack sweep; the winner is baked into the plan
+# 1f1b, a 1f1b-eager slack sweep, gpipe, and interleaved-1f1b with its own
+# chunk-granular split per vpp; the winner is baked into the plan.
+# require_fit=True makes it a real deployment search: HBM-derived
+# max_layers caps prune infeasible splits at segmentation time and
+# memory-hungry schedules (gpipe) only win if they actually fit.
 res = planner.search(
     cluster, LLAMA2_70B, global_batch=1920, seq_len=4096,
     pp_options=[10, 12], tp_options=[8], micro_bs_options=[1],
-    require_fit=False, include_tp_comm=False)
+    require_fit=True, include_tp_comm=False)
 
 print(f"searched plans ({res.evaluated} scored, {res.pruned} pruned by "
       "lower bound):")
@@ -34,8 +38,10 @@ p = res.prediction
 print(f"\nbest plan: {res.plan.describe()}")
 print(f"  non-uniform segmentation: {res.plan.layers}")
 print(f"  (faster AMD stages get ~2x the layers of GPU-A stages)")
-print(f"  selected schedule: {res.plan.schedule} "
-      f"(eager slack {res.plan.eager_slack})")
+sched = res.plan.schedule
+detail = (f"vpp {res.plan.vpp}" if sched == "interleaved-1f1b"
+          else f"eager slack {res.plan.eager_slack}")
+print(f"  selected schedule: {sched} ({detail})")
 print(f"  iter={p.iter_time*1e3:.1f} ms  tgs={p.tgs:.1f} tok/acc/s  "
       f"mfu={p.mfu*100:.2f}% = {p.mfu_of_bound*100:.1f}% of the "
       f"theoretical bound")

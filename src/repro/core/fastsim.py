@@ -20,6 +20,14 @@ avoids the oracle's O(m·pp²) rescan loop:
                     backward (lookahead 1, in-flight bounded by
                     ``pp - stage + slack``) through a heap —
                     O(pp·m·log pp) instead of the oracle's O(m·pp²).
+  * ``interleaved-1f1b``  virtual pipeline stages (vpp chunks per physical
+                    stage, ``timings`` in virtual order — see the oracle's
+                    docstring).  Same bounded-lookahead heap loop
+                    generalized to chunks: each physical stage exposes the
+                    next forward and next backward of each of its vpp
+                    chunks, in-flight chunk-forwards capped at the Megatron
+                    warmup envelope — O(pp·vpp·m·(vpp + log pp)) vs the
+                    oracle's O(m·vpp²·pp²) rescan.
 
 Exactness: identical op orders and start times as the oracle for strictly
 positive fwd/bwd durations (ties across stages are then provably
@@ -34,7 +42,8 @@ from typing import List, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.simulator import SimReport, StageTiming
+from repro.core.simulator import (ScheduleError, SimReport, StageTiming,
+                                  interleaved_inflight_cap)
 
 
 def _chain_max(d: np.ndarray, c: np.ndarray) -> np.ndarray:
@@ -244,7 +253,10 @@ def _1f1b_eager(fa: np.ndarray, ba: np.ndarray, sa: np.ndarray, m: int,
     done = 0
     total = 2 * m * pp
     while done < total:
-        assert heap, "schedule deadlocked (dependency bug)"
+        if not heap:  # pragma: no cover - dependency bug guard
+            stuck = next(i for i in range(pp) if nf[i] < m or nb[i] < m)
+            raise ScheduleError(stuck, min(nf[stuck], nb[stuck]),
+                                "F" if nf[stuck] < m else "B", "1f1b-eager")
         start, kind, i, v = heapq.heappop(heap)
         if v != ver[i]:
             continue
@@ -268,41 +280,203 @@ def _1f1b_eager(fa: np.ndarray, ba: np.ndarray, sa: np.ndarray, m: int,
     return np.array(F), np.array(B)
 
 
+# --------------------------------------------------------- interleaved-1f1b --
+def _interleaved(fa: List[float], ba: List[float], sa: List[float], m: int,
+                 vpp: int, inflight_cap) -> Tuple[np.ndarray, list]:
+    """Bounded-lookahead heap DES replaying the oracle's greedy interleaved
+    policy over V = pp*vpp virtual stages (timings in virtual order).
+
+    Per physical stage the candidates are the heads of its Megatron fwd /
+    bwd streams (``simulator.interleaved_streams``) — lookahead 1 per
+    direction; earliest start wins, ties prefer backward — byte-identical
+    policy to simulator._simulate_interleaved.  An executed op re-enqueues
+    its own stage plus the (at most one) neighbor stage whose stream-head
+    op it just enabled, so the heap sees O(V·m) pushes instead of the
+    oracle's O(m²·vpp²·pp²) rescans."""
+    from repro.core.simulator import interleaved_streams
+
+    V = len(fa)
+    pp = V // vpp
+    done_f = [[False] * m for _ in range(V)]
+    done_b = [[False] * m for _ in range(V)]
+    F = [[0.0] * m for _ in range(V)]
+    B = [[0.0] * m for _ in range(V)]
+    fseq, bseq = interleaved_streams(pp, vpp, m)
+    n_ops = m * vpp
+    pf = [0] * pp
+    pb = [0] * pp
+    free = [0.0] * pp
+    inflight = [0] * pp
+    cap = [interleaved_inflight_cap(i, pp, m, vpp) if inflight_cap is None
+           else inflight_cap for i in range(pp)]
+    ver = [0] * pp
+    last = V - 1
+    heap: list = []
+    push = heapq.heappush
+
+    def enqueue(i: int) -> None:
+        ver[i] += 1
+        fr = free[i]
+        best = None
+        if pb[i] < n_ops:
+            c, j = bseq[pb[i]]
+            vs = c * pp + i
+            if vs == last:
+                d = F[vs][j] if done_f[vs][j] else None
+            else:
+                d = B[vs + 1][j] + sa[vs] if done_b[vs + 1][j] else None
+            if d is not None:
+                best = (fr if fr > d else d, 0, vs, j)
+        if pf[i] < n_ops and inflight[i] < cap[i]:
+            c, j = fseq[pf[i]]
+            vs = c * pp + i
+            if vs == 0:
+                d = 0.0
+            else:
+                d = F[vs - 1][j] + sa[vs - 1] if done_f[vs - 1][j] else None
+            if d is not None:
+                cand = (fr if fr > d else d, 1, vs, j)
+                if best is None or cand < best:
+                    best = cand
+        if best is not None:
+            push(heap, best + (i, ver[i]))
+
+    for i in range(pp):
+        enqueue(i)
+    done = 0
+    total = 2 * m * V
+    while done < total:
+        if not heap:
+            i = next(k for k in range(pp)
+                     if pf[k] < n_ops or pb[k] < n_ops)
+            stuck_f = pf[i] < n_ops
+            c, j = fseq[pf[i]] if stuck_f else bseq[pb[i]]
+            raise ScheduleError(
+                i, j, "F" if stuck_f else "B", "interleaved-1f1b",
+                f"chunk {c} " + (f"forward blocked (in-flight cap {cap[i]})"
+                                 if stuck_f
+                                 else "backward dependency never satisfied"))
+        start, dir_key, vs, j, i, v = heapq.heappop(heap)
+        if v != ver[i]:
+            continue
+        if dir_key == 1:
+            F[vs][j] = free[i] = start + fa[vs]
+            done_f[vs][j] = True
+            pf[i] += 1
+            inflight[i] += 1
+            enqueue(i)
+            # F(vs,j) enables F(vs+1,j) / B(V-1,j) iff it is the head of
+            # the neighbor's stream (same-stage heads covered by enqueue(i))
+            if vs < last:
+                ni = (vs + 1) % pp
+                if ni != i and pf[ni] < n_ops and \
+                        fseq[pf[ni]] == ((vs + 1) // pp, j):
+                    enqueue(ni)
+        else:
+            B[vs][j] = free[i] = start + ba[vs]
+            done_b[vs][j] = True
+            pb[i] += 1
+            inflight[i] -= 1
+            enqueue(i)
+            # B(vs,j) enables B(vs-1,j) iff it heads the neighbor's stream
+            if vs > 0:
+                ni = (vs - 1) % pp
+                if ni != i and pb[ni] < n_ops and \
+                        bseq[pb[ni]] == ((vs - 1) // pp, j):
+                    enqueue(ni)
+        done += 1
+    # per-physical-stage last backward (its bwd stream's tail)
+    last_b = np.array([max(B[c * pp + i][m - 1] for c in range(vpp))
+                       for i in range(pp)])
+    return last_b, [m * sum(fa[c * pp + i] + ba[c * pp + i]
+                            for c in range(vpp)) for i in range(pp)]
+
+
 # ---------------------------------------------------------------- frontend --
 def lower_bound(timings: Sequence[StageTiming], m: int,
-                dp_allreduce: float = 0.0) -> float:
+                dp_allreduce: float = 0.0, vpp: int = 1) -> float:
     """Schedule-independent iteration-time lower bound.
 
-    For every stage i (any of 1f1b / 1f1b-eager / gpipe):
-      * its first forward cannot start before the forward dependency chain
-        sum_{k<i}(fwd_k + send_k);
-      * its 2m ops are serial: m·(fwd_i + bwd_i) of busy time;
-      * its last op is B(m-1), whose backward chain to stage 0 still costs
-        sum_{k<i}(bwd_k + send_k) — eager overlap reorders work around the
-        sends, it never removes them from these two chains.
+    For every stage i (any of 1f1b / 1f1b-eager / gpipe / interleaved):
+      * its first op cannot start before the forward dependency chain
+        into its first (virtual) stage: sum_{k<i}(fwd_k + send_k);
+      * its 2m ops are serial: m·(fwd_i + bwd_i) of busy time — under
+        interleaving a PHYSICAL stage serializes all its chunks,
+        m·sum_c(fwd_c + bwd_c);
+      * its last op is a B(m-1) whose backward chain to (virtual) stage 0
+        still costs sum_{k<i}(bwd_k + send_k) — eager overlap reorders work
+        around the sends, it never removes them from these two chains.
     So iter_time >= max_i [chain_in(i) + m·busy_i + chain_out(i)], and with
     an overlapped gradient all-reduce >= max_i [chain_in(i) + m·busy_i] +
-    dp_allreduce.  Tight enough (it includes warmup+drain) that the
-    planner's best-first loop prunes most non-winning candidates unscored."""
-    pf = pb = 0.0
+    dp_allreduce.  With ``vpp > 1`` (timings in virtual order) both the
+    per-physical-stage and per-virtual-stage variants of the bound apply;
+    the max of all is returned.  Tight enough (it includes warmup+drain)
+    that the planner's best-first loop prunes most non-winning candidates
+    unscored."""
+    V = len(timings)
+    if vpp == 1:
+        pf = pb = 0.0
+        lb = lb_dp = 0.0
+        for t in timings:
+            serial = m * (t.fwd + t.bwd)
+            lb = max(lb, pf + serial + pb)
+            lb_dp = max(lb_dp, pf + serial)
+            pf += t.fwd + t.send
+            pb += t.bwd + t.send
+        return max(lb, lb_dp + dp_allreduce)
+    pp = V // vpp
+    chain_in = [0.0] * V
+    chain_out = [0.0] * V
+    cin = cout = 0.0
+    for vs, t in enumerate(timings):
+        chain_in[vs] = cin
+        chain_out[vs] = cout
+        cin += t.fwd + t.send
+        cout += t.bwd + t.send
     lb = lb_dp = 0.0
-    for t in timings:
+    for vs, t in enumerate(timings):       # per-virtual-stage serial bound
         serial = m * (t.fwd + t.bwd)
-        lb = max(lb, pf + serial + pb)
-        lb_dp = max(lb_dp, pf + serial)
-        pf += t.fwd + t.send
-        pb += t.bwd + t.send
+        lb = max(lb, chain_in[vs] + serial + chain_out[vs])
+        lb_dp = max(lb_dp, chain_in[vs] + serial)
+    for i in range(pp):                    # per-physical-stage serial bound
+        serial = m * sum(timings[c * pp + i].fwd + timings[c * pp + i].bwd
+                         for c in range(vpp))
+        lb = max(lb, chain_in[i] + serial + chain_out[i])
+        lb_dp = max(lb_dp, chain_in[i] + serial)
     return max(lb, lb_dp + dp_allreduce)
 
 
 def simulate(timings: Sequence[StageTiming], m: int,
              schedule: str = "1f1b-eager", dp_allreduce: float = 0.0,
-             overlap_dp: bool = True, eager_slack: int = 2) -> SimReport:
-    """Drop-in fast equivalent of ``simulator.simulate``."""
+             overlap_dp: bool = True, eager_slack: int = 2, vpp: int = 1,
+             inflight_cap=None) -> SimReport:
+    """Drop-in fast equivalent of ``simulator.simulate`` (``vpp`` /
+    ``inflight_cap`` apply to interleaved-1f1b only; ``timings`` are then
+    pp*vpp entries in virtual order)."""
     pp = len(timings)
-    f = np.array([t.fwd for t in timings])
-    b = np.array([t.bwd for t in timings])
-    send = np.array([t.send for t in timings])
+    f = [t.fwd for t in timings]
+    b = [t.bwd for t in timings]
+    send = [t.send for t in timings]
+    if schedule == "interleaved-1f1b":
+        if vpp < 1 or pp % vpp:
+            raise ValueError(
+                f"interleaved-1f1b needs len(timings) divisible by vpp; "
+                f"got {pp} timings, vpp={vpp}")
+        last_b, busy = _interleaved(f, b, send, m, vpp, inflight_cap)
+        end = float(last_b.max())
+        if dp_allreduce > 0.0:
+            if overlap_dp:
+                end = max(end, float(last_b.max() + dp_allreduce))
+            else:
+                end += dp_allreduce
+        bubble = 1.0 - sum(x / end for x in busy) / len(busy)
+        return SimReport(iter_time=end, stage_busy=tuple(busy),
+                         bubble_frac=bubble, schedule=schedule)
+    if vpp != 1:
+        raise ValueError(f"schedule {schedule!r} does not take vpp={vpp}")
+    f = np.asarray(f)
+    b = np.asarray(b)
+    send = np.asarray(send)
     if schedule == "gpipe":
         _, B = _gpipe(f, b, send, m)
     elif schedule == "1f1b":

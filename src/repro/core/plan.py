@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Tuple
+from typing import Optional, Tuple
 
 from repro.core.cluster import validate_transport
 
@@ -31,7 +31,15 @@ class ParallelPlan:
     """``micro_bs`` is the per-replica microbatch size at stage 0.  Stages may
     have different DP degrees (heterogeneous groups); each stage's microbatch
     size is scaled so every stage consumes the same sequences per pipeline
-    tick: mbs_i = tokens_per_tick / dp_i."""
+    tick: mbs_i = tokens_per_tick / dp_i.
+
+    ``vpp`` (virtual stages per physical stage, schedule
+    "interleaved-1f1b") makes each stage hold vpp model chunks; chunk c of
+    stage i is virtual stage c*pp + i.  ``chunk_layers`` optionally pins
+    the per-virtual-stage layer counts (virtual order, summing to each
+    stage's n_layers per stage) — the planner's chunk-granular dp_split
+    writes it; None splits every stage's layers evenly across its
+    chunks."""
     stages: Tuple[StagePlacement, ...]
     micro_bs: int
     global_batch: int
@@ -41,9 +49,30 @@ class ParallelPlan:
     # selects these per plan (ROADMAP: per-stage schedule selection)
     schedule: str = "1f1b"
     eager_slack: int = 2     # only meaningful for schedule="1f1b-eager"
+    vpp: int = 1             # virtual stages per physical stage
+    chunk_layers: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self):
         validate_transport(self.transport)
+        if self.vpp < 1:
+            raise ValueError(f"vpp must be >= 1, got {self.vpp}")
+        if self.vpp > 1 and self.schedule != "interleaved-1f1b":
+            raise ValueError(
+                f"vpp={self.vpp} requires schedule='interleaved-1f1b', "
+                f"got {self.schedule!r}")
+        if self.chunk_layers is not None:
+            pp = len(self.stages)
+            if len(self.chunk_layers) != pp * self.vpp:
+                raise ValueError(
+                    f"chunk_layers needs pp*vpp={pp * self.vpp} entries, "
+                    f"got {len(self.chunk_layers)}")
+            for i, st in enumerate(self.stages):
+                got = sum(self.chunk_layers[c * pp + i]
+                          for c in range(self.vpp))
+                if got != st.n_layers:
+                    raise ValueError(
+                        f"chunk_layers of stage {i} sum to {got}, "
+                        f"stage has {st.n_layers} layers")
 
     @property
     def pp(self) -> int:
@@ -78,12 +107,32 @@ class ParallelPlan:
     def layers(self) -> Tuple[int, ...]:
         return tuple(s.n_layers for s in self.stages)
 
+    @property
+    def virtual_layers(self) -> Tuple[int, ...]:
+        """Per-virtual-stage layer counts (virtual order: chunk c of stage
+        i at index c*pp + i).  ``chunk_layers`` when the planner pinned
+        them; otherwise each stage's layers split evenly across its chunks
+        (earlier chunks take the remainder)."""
+        if self.chunk_layers is not None:
+            return self.chunk_layers
+        if self.vpp == 1:
+            return self.layers
+        pp = self.pp
+        out = [0] * (pp * self.vpp)
+        for i, st in enumerate(self.stages):
+            base, rem = divmod(st.n_layers, self.vpp)
+            for c in range(self.vpp):
+                out[c * pp + i] = base + (1 if c < rem else 0)
+        return tuple(out)
+
     def describe(self) -> str:
         seg = "".join(str(s.n_layers) for s in self.stages) \
             if max(self.layers) < 10 else "-".join(map(str, self.layers))
         sched = self.schedule
         if sched == "1f1b-eager":
             sched += f"+{self.eager_slack}"
+        elif sched == "interleaved-1f1b":
+            sched += f"x{self.vpp}"
         return (f"pp={self.pp} tp={self.stages[0].tp} dp={self.dp} "
                 f"mbs={self.micro_bs} m={self.micro_batches} "
                 f"sched={sched} seg={seg}")

@@ -16,8 +16,14 @@ Rules guiding the DFS (paper):
   2. minimum end-to-end time — every leaf is scored by the distributed
      performance predictor (workload simulator), lowest wins.  With
      ``schedule="auto"`` each surviving split is scored under strict
-     ``1f1b`` and ``1f1b-eager`` across a small eager-slack sweep, and the
-     winning schedule is recorded in the plan.
+     ``1f1b``, ``1f1b-eager`` across a small eager-slack sweep, ``gpipe``,
+     and ``interleaved-1f1b`` with vpp ∈ ``vpp_options`` (each vpp gets
+     its own chunk-granular dp_split over the pp*vpp virtual stages); the
+     winning schedule (+ slack / vpp / chunk layers) is recorded in the
+     plan.  Level 1 additionally explores non-contiguous stage→group
+     orders (fast islands at the pipeline ends), and ``require_fit``
+     searches derive per-stage ``max_layers`` caps from HBM limits so
+     infeasible splits are pruned at segmentation time.
 
 Engines:
   * ``fast``       (default) memoized cost-source reads, cached per-stage
@@ -53,6 +59,44 @@ class PlannerResult:
     evaluated: int
     log: Tuple[Tuple[str, float], ...]  # (plan description, iter_time)
     pruned: int = 0   # candidates skipped by the lower-bound cutoff
+
+
+def _stage_group_orders(cluster: ClusterSpec, pp: int,
+                        explore: bool = True) -> List[List[int]]:
+    """Candidate stage→group assignments for a pipeline of pp stages.
+
+    Always contains the contiguous assignment (``_stage_groups``).  With
+    ``explore`` and a heterogeneous cluster it adds non-contiguous orders
+    (ROADMAP: non-contiguous stage-to-group assignment): the reversed
+    island order, and the fastest island split across both pipeline ends —
+    end stages carry the least warmup/drain exposure under 1F1B, so fast
+    islands there can absorb more layers before becoming the bottleneck.
+    Extra orders cost extra boundary P2P hops; the schedule sweep decides
+    per candidate whether that trade wins (cheap now that the best-first
+    loop prunes by lower bound)."""
+    base = _stage_groups(cluster, pp)
+    if base is None:
+        return []
+    orders = [base]
+    if explore and len(cluster.groups) > 1:
+        orders.append(list(reversed(base)))
+        fastest = max(range(len(cluster.groups)),
+                      key=lambda g: cluster.groups[g].device.effective_tflops)
+        cf = base.count(fastest)
+        if cf > 1:
+            front = (cf + 1) // 2
+            mid = [g for g in base if g != fastest]
+            orders.append([fastest] * front + mid
+                          + [fastest] * (cf - front))
+        seen = set()
+        uniq = []
+        for o in orders:
+            t = tuple(o)
+            if t not in seen:
+                seen.add(t)
+                uniq.append(o)
+        orders = uniq
+    return orders
 
 
 def _stage_groups(cluster: ClusterSpec, pp: int) -> Optional[List[int]]:
@@ -109,6 +153,8 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
            micro_bs_options: Sequence[int] = (1, 2),
            nonuniform: bool = True, schedule: str = "auto",
            eager_slack_options: Sequence[int] = DEFAULT_EAGER_SLACKS,
+           vpp_options: Sequence[int] = (2, 3, 4),
+           explore_orders: bool = True,
            calibration: float = 1.0, require_fit: bool = True,
            include_tp_comm: bool = True,
            cost_source: Optional[costmodel.CostSource] = None,
@@ -119,9 +165,17 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
     (repro.profile.model.ProfiledCostModel) instead of the analytic model;
     None keeps the analytic default.
 
-    ``schedule="auto"`` scores each split under strict 1f1b and 1f1b-eager
-    (sweeping ``eager_slack_options``) and bakes the winner into the
-    returned plan; pass an explicit schedule name to pin it."""
+    ``schedule="auto"`` scores each split under strict 1f1b, 1f1b-eager
+    (sweeping ``eager_slack_options``), gpipe, and interleaved-1f1b with
+    vpp ∈ ``vpp_options`` — interleaved candidates get their own
+    chunk-granular dp_split over pp*vpp virtual stages — and bakes the
+    winner (schedule, slack, vpp, chunk layers) into the returned plan;
+    pass an explicit schedule name to pin it.
+
+    ``explore_orders`` also tries non-contiguous stage→group orders
+    (fast islands at the pipeline ends); ``require_fit`` derives
+    HBM-based ``max_layers`` caps from ``predictor.stage_max_layers`` so
+    infeasible splits are pruned at segmentation time."""
     if engine == "reference":
         return _search_reference(
             cluster, cfg, global_batch=global_batch, seq_len=seq_len,
@@ -141,77 +195,116 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
     if schedule == "auto":
         scheds: List[Tuple[str, int]] = [("1f1b", 2)]
         scheds += [("1f1b-eager", k) for k in eager_slack_options]
+        scheds.append(("gpipe", 2))
+        vpps: Sequence[int] = vpp_options
     elif schedule == "1f1b-eager":
         # schedule pinned, slack still swept — slack is a tuning knob of
         # the eager schedule, not a different schedule
         scheds = [("1f1b-eager", k) for k in eager_slack_options]
+        vpps = ()
+    elif schedule == "interleaved-1f1b":
+        # vpp swept for the same reason slack is for eager
+        scheds = []
+        vpps = vpp_options
     else:
         scheds = [(schedule, 2)]
+        vpps = ()
     L = cfg.num_layers
 
     # ---- phase 1: enumerate candidate (placement, split) leaves cheaply,
-    # with a schedule-independent lower bound each (no simulation yet)
-    cands: List[Tuple[float, str, tuple, list, int]] = []
+    # with a schedule-independent lower bound each (no simulation yet).
+    # Entries: (lb, tag, micro_bs, vpp, chunk_layers, stages, timings);
+    # vpp == 1 entries are scored under ``scheds``, vpp > 1 entries under
+    # interleaved-1f1b with their own chunk-granular split.
+    cands: List[tuple] = []
     for pp in _candidate_pps(cluster, L, pp_options):                # level 1
-        groups = _stage_groups(cluster, pp)
-        if groups is None:
-            continue
-        for tp in tp_options:                                        # level 3
-            dp_g = _group_dp(cluster, groups, tp)                    # level 2
-            if dp_g is None:
-                continue
-            dp_st = [dp_g[groups[i]] for i in range(pp)]
-            for micro_bs in micro_bs_options:
-                # probe plan: tick/microbatch algebra lives in ONE place
-                # (ParallelPlan); layer counts do not enter it
-                probe = ParallelPlan(
-                    stages=tuple(
-                        StagePlacement(group=groups[i], n_layers=1,
-                                       dp=dp_st[i], tp=tp,
-                                       is_last=(i == pp - 1))
-                        for i in range(pp)),
-                    micro_bs=micro_bs, global_batch=global_batch,
-                    seq_len=seq_len)
-                if global_batch % probe.tokens_per_tick:
+        for groups in _stage_group_orders(cluster, pp, explore_orders):
+            for tp in tp_options:                                    # level 3
+                dp_g = _group_dp(cluster, groups, tp)                # level 2
+                if dp_g is None:
                     continue
-                m = probe.micro_batches
-                mbs_st = [probe.stage_micro_bs(i) for i in range(pp)]
-                coeffs = [pred.stage_coeffs(
-                    groups[i], mbs_st[i], tp, dp_st[i], i == pp - 1,
-                    groups[i + 1] if i + 1 < pp else None, seq_len)
-                    for i in range(pp)]
-                # candidate splits (deduped; first tag wins)
-                splits: Dict[Tuple[int, ...], str] = {}
-                if nonuniform:
-                    # rule 1 on cost-source-derived per-stage per-layer
-                    # times: with a profile these are measured, closing
-                    # the nameplate-TFLOPs gap
+                dp_st = [dp_g[groups[i]] for i in range(pp)]
+                for micro_bs in micro_bs_options:
+                    # probe plan: tick/microbatch algebra lives in ONE
+                    # place (ParallelPlan); layer counts do not enter it
+                    probe = ParallelPlan(
+                        stages=tuple(
+                            StagePlacement(group=groups[i], n_layers=1,
+                                           dp=dp_st[i], tp=tp,
+                                           is_last=(i == pp - 1))
+                            for i in range(pp)),
+                        micro_bs=micro_bs, global_batch=global_batch,
+                        seq_len=seq_len)
+                    if global_batch % probe.tokens_per_tick:
+                        continue
+                    m = probe.micro_batches
+                    mbs_st = [probe.stage_micro_bs(i) for i in range(pp)]
+                    coeffs = [pred.stage_coeffs(
+                        groups[i], mbs_st[i], tp, dp_st[i], i == pp - 1,
+                        groups[i + 1] if i + 1 < pp else None, seq_len)
+                        for i in range(pp)]
                     t_pl = [c.fwd_per_layer + c.bwd_per_layer
                             for c in coeffs]
-                    offs = [c.fwd_const + c.bwd_const + c.send
-                            for c in coeffs]
-                    splits[tuple(segmentation.dp_split(L, t_pl, offs))] \
-                        = "dp"
-                    prop = segmentation.nonuniform_split(
-                        L, [1.0 / t for t in t_pl])
-                    prop = segmentation.rebalance(
-                        prop, [t * n for t, n in zip(t_pl, prop)])
-                    splits.setdefault(tuple(prop), "nonuniform")
-                splits.setdefault(tuple(segmentation.uniform_split(L, pp)),
-                                  "uniform")
-                for split, tag in splits.items():
-                    stages = tuple(
-                        StagePlacement(group=groups[i], n_layers=split[i],
-                                       dp=dp_st[i], tp=tp,
-                                       is_last=(i == pp - 1))
-                        for i in range(pp))
-                    timings = [c.timing(n) for c, n in zip(coeffs, split)]
-                    base = ParallelPlan(
-                        stages=stages, micro_bs=micro_bs,
-                        global_batch=global_batch, seq_len=seq_len)
-                    lb = fastsim.lower_bound(
-                        timings, m, pred.dp_allreduce_time(base))
-                    cands.append((lb, tag, stages, timings, micro_bs))
+                    # HBM-derived segmentation caps (1f1b is the least
+                    # memory-hungry schedule in the sweep, so its caps
+                    # never exclude a split some schedule could fit;
+                    # p.fits stays authoritative per schedule)
+                    caps = None
+                    if require_fit:
+                        caps = [pred.stage_max_layers(
+                            groups[i], mbs_st[i], tp, dp_st[i], i, pp, m,
+                            seq_len) for i in range(pp)]
+                        if min(caps) < 1 or sum(
+                                min(c, L) for c in caps) < L:
+                            continue     # no split of L layers can fit
+                    # candidate splits (deduped; first tag wins).  With the
+                    # schedule pinned to interleaved-1f1b, scheds is empty
+                    # and vpp==1 candidates could never be scored — skip
+                    # generating them
+                    splits: Dict[Tuple[int, ...], str] = {}
+                    if nonuniform and scheds:
+                        # rule 1 on cost-source-derived per-stage
+                        # per-layer times: with a profile these are
+                        # measured, closing the nameplate-TFLOPs gap
+                        offs = [c.fwd_const + c.bwd_const + c.send
+                                for c in coeffs]
+                        splits[tuple(segmentation.dp_split(
+                            L, t_pl, offs, max_layers=caps))] = "dp"
+                        prop = segmentation.nonuniform_split(
+                            L, [1.0 / t for t in t_pl])
+                        prop = segmentation.rebalance(
+                            prop, [t * n for t, n in zip(t_pl, prop)])
+                        splits.setdefault(tuple(prop), "nonuniform")
+                    if scheds:
+                        splits.setdefault(
+                            tuple(segmentation.uniform_split(L, pp)),
+                            "uniform")
+                    for split, tag in splits.items():
+                        stages = tuple(
+                            StagePlacement(group=groups[i],
+                                           n_layers=split[i],
+                                           dp=dp_st[i], tp=tp,
+                                           is_last=(i == pp - 1))
+                            for i in range(pp))
+                        timings = [c.timing(n)
+                                   for c, n in zip(coeffs, split)]
+                        base = ParallelPlan(
+                            stages=stages, micro_bs=micro_bs,
+                            global_batch=global_batch, seq_len=seq_len)
+                        lb = fastsim.lower_bound(
+                            timings, m, pred.dp_allreduce_time(base))
+                        cands.append((lb, tag, micro_bs, 1, None,
+                                      stages, timings))
+                    # interleaved-1f1b: chunk-granular min-bottleneck
+                    # split over pp*vpp virtual stages (its own layer
+                    # assignment — finer chunks re-balance differently)
+                    for vpp in vpps:
+                        cand = _interleaved_candidate(
+                            pred, cluster, cfg, groups, dp_st, tp,
+                            micro_bs, m, mbs_st, coeffs, t_pl, caps, L,
+                            vpp, global_batch, seq_len)
+                        if cand is not None:
+                            cands.append(cand)
 
     # ---- phase 2: best-first scoring with lower-bound pruning — sorting
     # by bound finds a near-optimal plan early, after which candidates
@@ -221,16 +314,19 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
     log: List[Tuple[str, float]] = []
     evaluated = 0
     pruned = 0
-    for lb, tag, stages, timings, micro_bs in cands:
+    for lb, tag, micro_bs, vpp, chunk_layers, stages, timings in cands:
         if best is not None and lb >= best[0].iter_time:
             pruned += 1
             continue
-        for sched, slack in scheds:
+        cand_scheds = (scheds if vpp == 1
+                       else [("interleaved-1f1b", 2)])
+        for sched, slack in cand_scheds:
             if best is not None and lb >= best[0].iter_time:
                 break
             plan = ParallelPlan(stages=stages, micro_bs=micro_bs,
                                 global_batch=global_batch, seq_len=seq_len,
-                                schedule=sched, eager_slack=slack)
+                                schedule=sched, eager_slack=slack,
+                                vpp=vpp, chunk_layers=chunk_layers)
             p = pred.predict(plan, timings=timings)
             evaluated += 1
             log.append((f"{tag} {plan.describe()}", p.iter_time))
@@ -244,6 +340,66 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
     return PlannerResult(plan=best[1], prediction=best[0],
                          evaluated=evaluated, log=tuple(log),
                          pruned=pruned)
+
+
+def _interleaved_candidate(pred: PerformancePredictor, cluster: ClusterSpec,
+                           cfg: ModelConfig, groups: List[int],
+                           dp_st: List[int], tp: int, micro_bs: int, m: int,
+                           mbs_st: List[int], coeffs, t_pl: List[float],
+                           caps: Optional[List[int]], L: int, vpp: int,
+                           global_batch: int, seq_len: int
+                           ) -> Optional[tuple]:
+    """One interleaved-1f1b phase-1 candidate: chunk-granular dp_split
+    over the pp*vpp virtual stages (per-chunk per-layer time = the host
+    stage's; offsets = per-hop P2P sends incl. the pp-1 -> 0 wrap and the
+    final chunk's unembedding), virtual timings, and its lower bound.
+    Returns None when vpp doesn't fit (L < pp*vpp, or the HBM caps admit
+    no chunk split)."""
+    pp = len(groups)
+    V = pp * vpp
+    if L < V:
+        return None
+    caps_int = None
+    if caps is not None:
+        # per-stage caps under the interleaved memory envelope, applied
+        # per chunk (loose: the binding constraint is the per-stage sum,
+        # which p.fits enforces post-scoring)
+        caps_int = [pred.stage_max_layers(
+            groups[i], mbs_st[i], tp, dp_st[i], i, pp, m, seq_len,
+            schedule="interleaved-1f1b", vpp=vpp) for i in range(pp)]
+        if min(caps_int) < 1 or sum(
+                min(c * vpp, L) for c in caps_int) < L:
+            return None
+    wrap = (pred.p2p_time(groups[-1], groups[0], mbs_st[-1], seq_len)
+            if pp > 1 else 0.0)
+    t_v = [t_pl[i] for c in range(vpp) for i in range(pp)]
+    off_v = []
+    for vs in range(V):
+        i = vs % pp
+        if vs == V - 1:
+            off_v.append(coeffs[i].fwd_const + coeffs[i].bwd_const)
+        elif i == pp - 1:
+            off_v.append(wrap)
+        else:
+            off_v.append(coeffs[i].send)
+    caps_v = ([caps_int[vs % pp] for vs in range(V)]
+              if caps_int is not None else None)
+    chunk = segmentation.dp_split(L, t_v, off_v, max_layers=caps_v)
+    split = [sum(chunk[c * pp + i] for c in range(vpp))
+             for i in range(pp)]
+    stages = tuple(
+        StagePlacement(group=groups[i], n_layers=split[i], dp=dp_st[i],
+                       tp=tp, is_last=(i == pp - 1))
+        for i in range(pp))
+    plan = ParallelPlan(stages=stages, micro_bs=micro_bs,
+                        global_batch=global_batch, seq_len=seq_len,
+                        schedule="interleaved-1f1b", vpp=vpp,
+                        chunk_layers=tuple(chunk))
+    timings = pred.virtual_timings(plan, coeffs)
+    lb = fastsim.lower_bound(timings, m, pred.dp_allreduce_time(plan),
+                             vpp=vpp)
+    return (lb, f"dp-vpp{vpp}", micro_bs, vpp, tuple(chunk), stages,
+            timings)
 
 
 # ---------------------------------------------------------------------------

@@ -62,6 +62,7 @@ class Prediction:
     fits: bool
     schedule: str = "1f1b"
     eager_slack: int = 2
+    vpp: int = 1             # virtual stages per physical stage (interleaved)
 
     @property
     def mfu_of_bound(self) -> float:
@@ -157,6 +158,61 @@ class PerformancePredictor:
             plan.seq_len, plan.transport)
             for i, st in enumerate(plan.stages)]
 
+    def p2p_time(self, ga: int, gb: int, mbs: int, seq_len: int,
+                 transport: str = "gpu") -> float:
+        """One microbatch's activation P2P time between node groups —
+        the same Eq.3 volume/bandwidth the stage coefficients use; needed
+        separately for interleaving's pp-1 -> 0 wrap-around hop."""
+        key = ("p2p", ga, gb, mbs, seq_len, transport)
+        if self._memo:
+            hit = self._dp_coeffs.get(key)
+            if hit is not None:
+                return hit
+        bw = self.src.link_gbps(self.cluster, ga, gb, transport)
+        vol = self.src.comm_volume(self.cfg, mbs, seq_len, 1, 1).pp_p2p
+        out = vol / (bw * GBPS)
+        if self._memo:
+            self._dp_coeffs[key] = out
+        return out
+
+    def virtual_timings(self, plan: ParallelPlan,
+                        coeffs: Optional[List[StageCoeffs]] = None
+                        ) -> List[simulator.StageTiming]:
+        """Per-VIRTUAL-stage timings for interleaved-1f1b, in virtual order
+        (chunk c of stage i at index c*pp + i — the convention
+        simulator/fastsim expect).  Chunk times follow the stage's linear
+        coefficients on its chunk layer count; the last-stage unembedding
+        constant lands on the final chunk only; sends between passes wrap
+        from physical stage pp-1 back to stage 0."""
+        pp = plan.pp
+        vpp = plan.vpp
+        V = pp * vpp
+        if coeffs is None:
+            coeffs = self.plan_coeffs(plan)
+        vl = plan.virtual_layers
+        wrap = 0.0
+        if vpp > 1 and pp > 1:
+            wrap = self.p2p_time(
+                plan.stages[-1].group, plan.stages[0].group,
+                plan.stage_micro_bs(pp - 1), plan.seq_len, plan.transport)
+        out = []
+        for vs in range(V):
+            i = vs % pp
+            c = coeffs[i]
+            n = vl[vs]
+            fwd = c.fwd_per_layer * n
+            bwd = c.bwd_per_layer * n
+            if vs == V - 1:
+                fwd += c.fwd_const
+                bwd += c.bwd_const
+                send = 0.0
+            elif i == pp - 1:
+                send = wrap
+            else:
+                send = c.send
+            out.append(simulator.StageTiming(fwd=fwd, bwd=bwd, send=send))
+        return out
+
     def stage_timing(self, plan: ParallelPlan, i: int) -> simulator.StageTiming:
         st = plan.stages[i]
         return self.stage_coeffs(
@@ -192,17 +248,40 @@ class PerformancePredictor:
         schedule = schedule if schedule is not None else plan.schedule
         eager_slack = (eager_slack if eager_slack is not None
                        else plan.eager_slack)
+        vpp = plan.vpp if schedule == "interleaved-1f1b" else 1
         lc = self.src.layer_cost(self.cfg, plan.seq_len)
         out = []
         for i, st in enumerate(plan.stages):
             params = lc.param_bytes * st.n_layers / st.tp
             opt = params * (6.0 + 2.0 / st.dp)  # fp32 master+m+v ZeRO-1-ish
+            # interleaved: n_mb counts in-flight CHUNKS of ~n_layers/vpp
+            # layers each (the stage's chunks are near-equal by
+            # construction — dp_split assigns at chunk granularity)
             n_mb = simulator.peak_activation_microbatches(
-                i, plan.pp, plan.micro_batches, schedule, eager_slack)
+                i, plan.pp, plan.micro_batches, schedule, eager_slack, vpp)
             acts = (lc.act_bytes_per_token * plan.stage_micro_bs(i)
-                    * plan.seq_len * st.n_layers / st.tp) * n_mb
+                    * plan.seq_len * (st.n_layers / vpp) / st.tp) * n_mb
             out.append((params + opt + acts) / 1e9)
         return tuple(out)
+
+    def stage_max_layers(self, group: int, mbs: int, tp: int, dp: int,
+                         stage: int, pp: int, m: int, seq_len: int,
+                         schedule: str = "1f1b", eager_slack: int = 2,
+                         vpp: int = 1) -> int:
+        """Most layers a stage placement can hold inside its device HBM —
+        the inverse of ``peak_memory``'s linear-in-layers model.  The
+        planner feeds these as ``dp_split``/chunk-split ``max_layers`` caps
+        so require_fit searches prune infeasible splits at segmentation
+        time instead of post-scoring (ROADMAP: dp_split memory caps).  May
+        return 0: no layer count fits."""
+        lc = self.src.layer_cost(self.cfg, seq_len)
+        n_mb = simulator.peak_activation_microbatches(
+            stage, pp, m, schedule, eager_slack, vpp)
+        per_layer = (lc.param_bytes / tp * (7.0 + 2.0 / dp)
+                     + lc.act_bytes_per_token * mbs * seq_len / tp
+                     * (n_mb / vpp))
+        hbm = self.cluster.groups[group].device.hbm_gb * 1e9
+        return int(hbm / per_layer)
 
     # ----------------------------------------------------------- predict --
     def predict(self, plan: ParallelPlan, schedule: Optional[str] = None,
@@ -212,17 +291,23 @@ class PerformancePredictor:
                 ) -> Prediction:
         """``schedule``/``eager_slack`` default to the plan's own; pass
         ``timings`` (from ``plan_coeffs``) to skip rebuilding them when
-        scoring one split under several schedules."""
+        scoring one split under several schedules — for interleaved-1f1b
+        they must be the pp*vpp VIRTUAL timings (``virtual_timings``)."""
         schedule = schedule if schedule is not None else plan.schedule
         eager_slack = (eager_slack if eager_slack is not None
                        else plan.eager_slack)
+        vpp = plan.vpp if schedule == "interleaved-1f1b" else 1
         if timings is None:
-            timings = [self.stage_timing(plan, i) for i in range(plan.pp)]
+            if schedule == "interleaved-1f1b":
+                timings = self.virtual_timings(plan)
+            else:
+                timings = [self.stage_timing(plan, i)
+                           for i in range(plan.pp)]
         sim = (fastsim.simulate if self.sim_engine == "fast"
                else simulator.simulate)
         rep = sim(timings, plan.micro_batches, schedule,
                   dp_allreduce=self.dp_allreduce_time(plan),
-                  overlap_dp=overlap_dp, eager_slack=eager_slack)
+                  overlap_dp=overlap_dp, eager_slack=eager_slack, vpp=vpp)
         S = plan.n_accel
         tokens = plan.global_batch * plan.seq_len
         tgs = tokens / (S * rep.iter_time)               # Eq.1
@@ -237,4 +322,5 @@ class PerformancePredictor:
                           bubble_frac=rep.bubble_frac,
                           stage_times_fwd=tuple(t.fwd for t in timings),
                           peak_mem_gb=mems, fits=fits,
-                          schedule=schedule, eager_slack=eager_slack)
+                          schedule=schedule, eager_slack=eager_slack,
+                          vpp=vpp)

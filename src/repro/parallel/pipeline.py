@@ -15,6 +15,12 @@ padded to the max layer count and carry a per-(stage, layer) mask; masked
 layers are identity.  On heterogeneous hardware the planner assigns more
 real layers to faster pods.
 
+Interleaved virtual stages (planner schedule "interleaved-1f1b"): with
+``vpp > 1`` each pod holds vpp model chunks, params stack to
+(n_stages, vpp, Lmax, ...), and activations traverse all n_stages*vpp
+virtual slots — so plans the planner scores under interleaving execute in
+the trainer with the same chunk-granular layer assignment.
+
 Batches arrive pre-microbatched: tokens/labels shaped (m, B_tick, S) with
 B_tick sharded over 'data' — so no resharding at the microbatch split.
 """
@@ -35,17 +41,25 @@ from repro.train.steps import cross_entropy, constrain, AUX_COEF
 
 
 def stack_blocks_for_stages(params: Dict[str, Any], n_stages: int,
-                            layers_per_stage: Optional[Sequence[int]] = None
-                            ) -> Dict[str, Any]:
+                            layers_per_stage: Optional[Sequence[int]] = None,
+                            vpp: int = 1) -> Dict[str, Any]:
     """Reshape stacked layer params (L, ...) -> (n_stages, Lmax, ...) with
     zero padding for non-uniform splits (the per-stage layer mask is static,
-    derived from ``layers_per_stage`` inside make_pp_loss_fn)."""
+    derived from ``layers_per_stage`` inside make_pp_loss_fn).
+
+    ``vpp > 1`` (interleaved-1F1B virtual stages): the model is cut into
+    n_stages*vpp chunks assigned round-robin — virtual stage vs = c*pp + s
+    holds contiguous layers, living on pod s as its chunk c — and params
+    stack to (n_stages, vpp, Lmax_chunk, ...).  ``layers_per_stage`` is
+    then per VIRTUAL stage in virtual order (``ParallelPlan.virtual_layers``
+    / planner ``chunk_layers``)."""
     blocks = params["blocks"]
     L = jax.tree.leaves(blocks)[0].shape[0]
+    V = n_stages * vpp
     if layers_per_stage is None:
-        assert L % n_stages == 0
-        layers_per_stage = [L // n_stages] * n_stages
-    assert sum(layers_per_stage) == L and len(layers_per_stage) == n_stages
+        assert L % V == 0
+        layers_per_stage = [L // V] * V
+    assert sum(layers_per_stage) == L and len(layers_per_stage) == V
     lmax = max(layers_per_stage)
 
     def restack(a):
@@ -58,7 +72,13 @@ def stack_blocks_for_stages(params: Dict[str, Any], n_stages: int,
                 pad = jnp.zeros((lmax - ls,) + a.shape[1:], a.dtype)
                 piece = jnp.concatenate([piece, pad], axis=0)
             pieces.append(piece)
-        return jnp.stack(pieces)
+        stages = jnp.stack(pieces)              # (V, Lmax, ...) virtual order
+        if vpp == 1:
+            return stages
+        # virtual index c*pp + s -> [s, c]: reshape to (vpp, pp, ...) then
+        # swap so the pod-sharded stage dim leads
+        return jnp.swapaxes(
+            stages.reshape((vpp, n_stages) + stages.shape[1:]), 0, 1)
 
     new = dict(params)
     new["blocks"] = jax.tree.map(restack, blocks)
@@ -80,12 +100,24 @@ def pp_param_specs(specs: Dict[str, Any]) -> Dict[str, Any]:
 
 def make_pp_loss_fn(cfg: ModelConfig, mesh, n_stages: int,
                     n_microbatches: int,
-                    layers_per_stage: Optional[Sequence[int]] = None):
-    """Builds loss_fn(params, batch) running the pod-axis pipeline."""
+                    layers_per_stage: Optional[Sequence[int]] = None,
+                    vpp: int = 1):
+    """Builds loss_fn(params, batch) running the pod-axis pipeline.
+
+    ``vpp > 1`` runs interleaved virtual stages: params stacked
+    (n_stages, vpp, Lmax, ...) by ``stack_blocks_for_stages(..., vpp=)``,
+    ``layers_per_stage`` per virtual stage in virtual order, and the
+    activation buffer walks all n_stages*vpp virtual slots — chunk c of
+    pod s computes virtual stage c*n_stages + s, the roll returns wrapped
+    activations to pod 0 at the next chunk (the planner's
+    interleaved-1f1b wrap-around hop)."""
     kinds = cfg.layer_kinds()
     kind = kinds[0]
     assert len(set(kinds)) == 1, "PP requires a uniform scanned stack"
     m = n_microbatches
+    if vpp > 1:
+        return _make_pp_loss_fn_vpp(cfg, mesh, n_stages, m,
+                                    layers_per_stage, vpp, kind)
 
     if layers_per_stage is not None:
         lmax = max(layers_per_stage)
@@ -147,6 +179,96 @@ def make_pp_loss_fn(cfg: ModelConfig, mesh, n_stages: int,
             aux_sum = aux_sum + jnp.sum(auxs * valid)
             out = constrain(out, buf_spec)
             buf = jnp.roll(out, 1, axis=0)   # collective-permute over 'pod'
+
+        loss = loss_sum / m + AUX_COEF * (aux_sum / m)
+        return loss, {"ce": loss_sum / m, "aux": aux_sum / m}
+
+    return loss_fn
+
+
+def _make_pp_loss_fn_vpp(cfg: ModelConfig, mesh, n_stages: int, m: int,
+                         layers_per_stage: Optional[Sequence[int]],
+                         vpp: int, kind: str):
+    """Interleaved virtual-stage pipeline: the (n_stages, vpp, B, S, D)
+    buffer holds one in-flight microbatch per VIRTUAL stage; each tick runs
+    every (pod, chunk) slot, then activations shift one virtual slot —
+    a pod-axis roll (collective-permute) plus, on the wrapped pod-0 row, a
+    local chunk-index advance.  Microbatch j finishes at tick
+    j + n_stages*vpp - 1, so interleaving trades more ticks for vpp-times
+    shallower per-chunk stacks (the planner's bubble-vs-memory trade is
+    modeled in core/simulator.py; this builder makes such plans
+    executable)."""
+    pp = n_stages
+    V = pp * vpp
+
+    if layers_per_stage is not None:
+        assert len(layers_per_stage) == V, \
+            f"vpp={vpp} needs {V} virtual-stage layer counts"
+        lmax = max(layers_per_stage)
+        # [s][c] -> mask row of virtual stage c*pp + s
+        mask_rows = [[[i < layers_per_stage[c * pp + s] for i in range(lmax)]
+                      for c in range(vpp)] for s in range(pp)]
+    else:
+        mask_rows = None
+
+    def stage_fn(blocks, mask, x):
+        """One chunk: scan its (Lmax, ...) layers; masked layers identity."""
+
+        def body(x, xs):
+            p, keep = xs
+            fn = functools.partial(_block_fwd, cfg=cfg, kind=kind)
+            if cfg.remat:
+                fn = jax.checkpoint(fn)
+            y, aux = fn(p, x)
+            y = jnp.where(keep, y, x)
+            return y, jnp.where(keep, aux, 0.0)
+
+        x, auxs = jax.lax.scan(body, x, (blocks, mask))
+        return x, jnp.sum(auxs)
+
+    buf_spec = P("pod", None, ("data",),
+                 "model" if cfg.act_sharding else None, None)
+
+    def loss_fn(params, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        extra = batch.get("image_embeds")
+        blocks = params["blocks"]                 # (pp, vpp, Lmax, ...)
+        lmax_ = jax.tree.leaves(blocks)[0].shape[2]
+        if mask_rows is None:
+            mask = jnp.ones((pp, vpp, lmax_), bool)
+        else:
+            mask = jnp.asarray(mask_rows)
+        Bt, S = tokens.shape[1], tokens.shape[2]
+        S_tot = S + (extra.shape[2] if extra is not None else 0)
+        D = cfg.d_model
+
+        buf = jnp.zeros((pp, vpp, Bt, S_tot, D), cfg.adtype)
+        loss_sum = jnp.zeros((), jnp.float32)
+        aux_sum = jnp.zeros((), jnp.float32)
+
+        for t in range(m + V - 1):
+            if t < m:  # inject next microbatch into virtual stage 0
+                inject = _embed_tokens(
+                    params, tokens[t], cfg,
+                    extra[t] if extra is not None else None)
+                buf = buf.at[0, 0].set(inject.astype(cfg.adtype))
+            buf = constrain(buf, buf_spec)
+            out, auxs = jax.vmap(jax.vmap(stage_fn))(blocks, mask, buf)
+            j_out = t - (V - 1)          # microbatch finishing this tick
+            if 0 <= j_out < m:
+                h = rmsnorm(params["final_norm"], out[-1, -1], cfg.norm_eps)
+                logits = _unembed(params, h, cfg)
+                logits = constrain(logits, P(("data",), None, "model"))
+                loss_sum = loss_sum + cross_entropy(logits, labels[j_out])
+            valid = jnp.asarray(
+                [[1.0 if 0 <= t - (c * pp + s) < m else 0.0
+                  for c in range(vpp)] for s in range(pp)], jnp.float32)
+            aux_sum = aux_sum + jnp.sum(auxs * valid)
+            out = constrain(out, buf_spec)
+            # virtual slot shift: pod roll (collective-permute), then the
+            # wrapped pod-0 row advances one chunk locally
+            rolled = jnp.roll(out, 1, axis=0)
+            buf = rolled.at[0].set(jnp.roll(rolled[0], 1, axis=0))
 
         loss = loss_sum / m + AUX_COEF * (aux_sum / m)
         return loss, {"ce": loss_sum / m, "aux": aux_sum / m}

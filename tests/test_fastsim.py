@@ -170,14 +170,16 @@ def test_planner_fast_no_worse_than_reference():
 
 
 def test_planner_auto_schedule_selection():
-    """schedule='auto' scores 1f1b + an eager-slack sweep per split and
-    bakes the winner into the plan; the winner must be at least as good as
-    the same plan scored under strict 1f1b."""
+    """schedule='auto' scores every split under the full schedule sweep
+    (1f1b, eager slacks, gpipe, interleaved-1f1b x vpp) and bakes the
+    winner into the plan; the winner must be at least as good as the same
+    plan scored under strict 1f1b."""
     cl = C.paper_cluster_of_size(96)
     res = planner.search(cl, LLAMA2_70B, global_batch=320, seq_len=4096,
                          pp_options=[12], tp_options=[8],
                          micro_bs_options=[1], require_fit=False)
-    assert res.plan.schedule in ("1f1b", "1f1b-eager")
+    assert res.plan.schedule in ("1f1b", "1f1b-eager", "gpipe",
+                                 "interleaved-1f1b")
     assert res.prediction.schedule == res.plan.schedule
     from repro.core.predictor import PerformancePredictor
     pred = PerformancePredictor(

@@ -1,0 +1,313 @@
+"""Schedule-equivalence lockdown suite: fastsim must be op-for-op exact
+against the event-driven oracle for ALL schedules — 1f1b, 1f1b-eager,
+gpipe, interleaved-1f1b x vpp — on randomized timings (hypothesis +
+seeded), the schedule-independent lower bound must hold, no schedule may
+deadlock, peak activation accounting must match the oracle's event trace,
+and HBM-derived segmentation caps must reject-then-fit.
+
+A fastsim-vs-oracle mismatch writes its repro (timings/m/schedule/vpp) to
+``benchmarks/artifacts/schedule_mismatch.json`` before failing, so CI can
+upload it as an artifact.
+"""
+import dataclasses
+import json
+import random
+from pathlib import Path
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.llama2_paper import LLAMA2_70B, LLAMA2_140B
+from repro.core import cluster as C
+from repro.core import fastsim, planner, segmentation, simulator
+from repro.core.plan import ParallelPlan, StagePlacement
+from repro.core.predictor import PerformancePredictor
+from repro.core.simulator import ScheduleError, StageTiming
+
+ALL_SCHEDULES = ("1f1b", "1f1b-eager", "gpipe", "interleaved-1f1b")
+MISMATCH_PATH = (Path(__file__).resolve().parents[1] / "benchmarks"
+                 / "artifacts" / "schedule_mismatch.json")
+
+
+def _dump_mismatch(timings, m, sch, vpp, slack, a, f):
+    MISMATCH_PATH.parent.mkdir(parents=True, exist_ok=True)
+    MISMATCH_PATH.write_text(json.dumps({
+        "schedule": sch, "m": m, "vpp": vpp, "eager_slack": slack,
+        "timings": [[t.fwd, t.bwd, t.send] for t in timings],
+        "oracle_iter_time": a, "fastsim_iter_time": f}, indent=1))
+
+
+def _assert_equal(timings, m, sch, vpp=1, slack=2, dp=0.0, overlap=True):
+    a = simulator.simulate(timings, m, sch, dp_allreduce=dp,
+                           overlap_dp=overlap, eager_slack=slack, vpp=vpp)
+    f = fastsim.simulate(timings, m, sch, dp_allreduce=dp,
+                         overlap_dp=overlap, eager_slack=slack, vpp=vpp)
+    if a.iter_time != pytest.approx(f.iter_time, rel=1e-9):
+        _dump_mismatch(timings, m, sch, vpp, slack, a.iter_time, f.iter_time)
+        raise AssertionError(
+            f"fastsim != oracle for {sch} vpp={vpp} m={m}: "
+            f"{f.iter_time} vs {a.iter_time} (repro: {MISMATCH_PATH})")
+    assert a.bubble_frac == pytest.approx(f.bubble_frac, rel=1e-6)
+    assert a.stage_busy == pytest.approx(f.stage_busy)
+    return a
+
+
+def _rand_virtual_timings(rng, n):
+    return [StageTiming(rng.uniform(0.05, 3.0), rng.uniform(0.05, 5.0),
+                        rng.choice([0.0, rng.uniform(0.0, 1.5)]))
+            for _ in range(n)]
+
+
+# ------------------------------------------------ fastsim == event oracle --
+def test_all_schedules_match_oracle_seeded():
+    """>= 250 deterministic randomized cases across every schedule and
+    vpp in {1..4}: exact iter_time equality, valid lower bound, and no
+    deadlock (the simulate calls completing IS the no-deadlock check)."""
+    rng = random.Random(0)
+    for _ in range(250):
+        pp = rng.randint(1, 6)
+        vpp = rng.randint(1, 4)
+        m = rng.randint(1, 12)
+        slack = rng.choice([0, 1, 2, 4])
+        dp = rng.choice([0.0, rng.uniform(0.0, 2.0)])
+        overlap = rng.choice([True, False])
+        phys = _rand_virtual_timings(rng, pp)
+        virt = _rand_virtual_timings(rng, pp * vpp)
+        for sch in ALL_SCHEDULES:
+            t = virt if sch == "interleaved-1f1b" else phys
+            v = vpp if sch == "interleaved-1f1b" else 1
+            r = _assert_equal(t, m, sch, vpp=v, slack=slack, dp=dp,
+                              overlap=overlap)
+            lb = fastsim.lower_bound(t, m, dp, vpp=v)
+            assert r.iter_time >= lb - 1e-9, (sch, v, m)
+
+
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(1, 8),
+       st.integers(0, 4),
+       st.lists(st.tuples(st.floats(0.05, 3.0), st.floats(0.05, 5.0),
+                          st.floats(0.0, 1.0)), min_size=1, max_size=16),
+       st.sampled_from(ALL_SCHEDULES))
+@settings(max_examples=150, deadline=None)
+def test_all_schedules_match_oracle_property(pp, vpp, m, slack, raw, sch):
+    n = pp * vpp if sch == "interleaved-1f1b" else pp
+    v = vpp if sch == "interleaved-1f1b" else 1
+    timings = [StageTiming(f, b, s) for f, b, s in (raw * n)[:n]]
+    r = _assert_equal(timings, m, sch, vpp=v, slack=slack)
+    assert r.iter_time >= fastsim.lower_bound(timings, m, vpp=v) - 1e-9
+
+
+def test_paper_cluster_timing_corpus():
+    """Seed corpus on the paper's 96N768D cluster shapes: the predictor's
+    actual virtual timings for Llama2-70B/140B at pp in {10, 12},
+    vpp in {1..4} — fastsim exact, bound valid, plans simulate without
+    deadlock."""
+    cl = C.paper_cluster_of_size(96)
+    for cfg in (LLAMA2_70B, LLAMA2_140B):
+        pred = PerformancePredictor(cl, cfg, include_tp_comm=False)
+        for pp in (10, 12):
+            groups = planner._stage_groups(cl, pp)
+            dpg = [cl.groups[g].n_accel // (8 * groups.count(g))
+                   for g in range(len(cl.groups))]
+            split = segmentation.uniform_split(cfg.num_layers, pp)
+            stages = tuple(
+                StagePlacement(group=groups[i], n_layers=split[i],
+                               dp=dpg[groups[i]], tp=8,
+                               is_last=(i == pp - 1))
+                for i in range(pp))
+            for vpp in (1, 2, 3, 4):
+                plan = ParallelPlan(
+                    stages=stages, micro_bs=1, global_batch=960,
+                    seq_len=4096, schedule="interleaved-1f1b", vpp=vpp)
+                t = pred.virtual_timings(plan)
+                m = plan.micro_batches
+                r = _assert_equal(t, m, "interleaved-1f1b", vpp=vpp)
+                assert r.iter_time >= fastsim.lower_bound(
+                    t, m, vpp=vpp) - 1e-9
+
+
+def test_interleaved_beats_strict_on_deep_uniform():
+    """The point of interleaving: on a deep uniform pipeline the finer
+    warmup/drain ramp strictly shrinks the bubble."""
+    for vpp in (2, 4):
+        strict = simulator.simulate(
+            [StageTiming(1.0, 2.0, 0.0)] * 8, 16, "1f1b")
+        inter = simulator.simulate(
+            [StageTiming(1.0 / vpp, 2.0 / vpp, 0.0)] * (8 * vpp), 16,
+            "interleaved-1f1b", vpp=vpp)
+        assert inter.iter_time < strict.iter_time
+        assert inter.bubble_frac < strict.bubble_frac
+
+
+# ------------------------------------------------------ deadlock reporting --
+def test_deadlock_raises_schedule_error_with_triple():
+    """A wedged schedule must raise the typed ScheduleError naming the
+    stuck (stage, microbatch, dir) triple — here forced via an in-flight
+    cap override too small to let microbatch 0 reach the last chunk."""
+    t = [StageTiming(1.0, 1.0, 0.0)] * 2
+    for sim in (simulator.simulate, fastsim.simulate):
+        with pytest.raises(ScheduleError) as ei:
+            sim(t, 4, "interleaved-1f1b", vpp=2, inflight_cap=1)
+        e = ei.value
+        assert (e.stage, e.microbatch, e.direction) == (0, 0, "F")
+        assert "stage=0" in str(e) and "microbatch=0" in str(e) \
+            and "dir=F" in str(e) and "in-flight cap 1" in str(e)
+
+
+def test_unknown_schedule_and_bad_vpp():
+    t = [StageTiming(1.0, 1.0, 0.0)] * 4
+    for sim in (simulator.simulate, fastsim.simulate):
+        with pytest.raises(ValueError, match="schedule"):
+            sim(t, 4, "wavefront")
+        with pytest.raises(ValueError, match="vpp"):
+            sim(t, 4, "1f1b", vpp=2)
+        with pytest.raises(ValueError, match="divisible"):
+            sim(t, 4, "interleaved-1f1b", vpp=3)
+
+
+# --------------------------------------------------- peak memory vs trace --
+def _trace_peaks(timings, m, vpp):
+    trace = []
+    simulator.simulate(timings, m, "interleaved-1f1b", vpp=vpp, trace=trace)
+    pp = len(timings) // vpp
+    peaks = []
+    for i in range(pp):
+        ev = sorted((e for e in trace if e.stage == i),
+                    key=lambda e: (e.start, e.dir == "F"))
+        cur = peak = 0
+        for e in ev:
+            cur += 1 if e.dir == "F" else -1
+            peak = max(peak, cur)
+        peaks.append(peak)
+    return peaks
+
+
+def test_interleaved_peak_matches_trace_exactly():
+    """On saturating shapes (uniform timings) the brute-force in-flight
+    count from the oracle's event trace equals
+    ``peak_activation_microbatches`` at every stage — including ragged
+    m < pp groups and the vpp*m-bound regime."""
+    for pp, vpp, m in [(4, 2, 16), (3, 3, 12), (2, 4, 9), (6, 2, 5),
+                       (5, 3, 4), (2, 2, 1), (1, 4, 6), (4, 2, 2)]:
+        t = [StageTiming(1.0, 1.0, 0.0)] * (pp * vpp)
+        peaks = _trace_peaks(t, m, vpp)
+        for i, peak in enumerate(peaks):
+            assert peak == simulator.peak_activation_microbatches(
+                i, pp, m, "interleaved-1f1b", vpp=vpp), (pp, vpp, m, i)
+
+
+@given(st.integers(1, 5), st.integers(1, 4), st.integers(1, 10),
+       st.lists(st.tuples(st.floats(0.05, 3.0), st.floats(0.05, 5.0),
+                          st.floats(0.0, 1.0)), min_size=1, max_size=20))
+@settings(max_examples=80, deadline=None)
+def test_interleaved_peak_never_exceeds_envelope(pp, vpp, m, raw):
+    """For arbitrary timings the trace peak is bounded by the enforced
+    envelope (the memory model sizes to the envelope)."""
+    n = pp * vpp
+    t = [StageTiming(f, b, s) for f, b, s in (raw * n)[:n]]
+    for i, peak in enumerate(_trace_peaks(t, m, vpp)):
+        assert peak <= simulator.peak_activation_microbatches(
+            i, pp, m, "interleaved-1f1b", vpp=vpp)
+
+
+# ------------------------------------------- HBM caps: reject-then-fit ----
+@pytest.mark.parametrize("dev", [C.NVIDIA, C.GPU_A, C.GPU_B, C.GPU_C,
+                                 C.AMD, C.TPU_V5E])
+def test_dp_split_honors_hbm_caps_per_device_kind(dev):
+    """Per device kind: the unconstrained min-bottleneck split overloads
+    the fast island beyond its HBM (reject), while the same split under
+    ``predictor.stage_max_layers`` caps respects them and the capped
+    stages genuinely fit (fit).  Exercises the planner's
+    prune-at-segmentation-time path for every paper device."""
+    slow = dataclasses.replace(dev, name=f"{dev.name}-slow",
+                               mfu=dev.mfu / 8.0)
+    cl = C.ClusterSpec(groups=(C.NodeGroup(dev, 2), C.NodeGroup(slow, 2)))
+    cfg = LLAMA2_70B
+    pred = PerformancePredictor(cl, cfg, include_tp_comm=False)
+    pp, tp, m, seq = 4, 8, 16, 4096
+    groups = [0, 0, 1, 1]
+    coeffs = [pred.stage_coeffs(groups[i], 1, tp, 2, i == pp - 1,
+                                groups[i + 1] if i + 1 < pp else None, seq)
+              for i in range(pp)]
+    t_pl = [c.fwd_per_layer + c.bwd_per_layer for c in coeffs]
+    caps = [pred.stage_max_layers(groups[i], 1, tp, 2, i, pp, m, seq)
+            for i in range(pp)]
+    assert min(caps) >= 1, f"{dev.name}: HBM must hold at least one layer"
+    # as many layers as this device kind can hold overall (TPU-v5e's 16GB
+    # caps far below the 80-layer model; big-HBM kinds take all 80)
+    L = min(cfg.num_layers, sum(caps))
+    free = segmentation.dp_split(L, t_pl)
+    assert any(n > c for n, c in zip(free, caps)), \
+        "8x speed ratio must overload the fast island beyond HBM"
+    capped = segmentation.dp_split(L, t_pl, max_layers=caps)
+    assert sum(capped) == L
+    assert all(n <= c for n, c in zip(capped, caps))
+    # the caps are honest: cap layers fit the device HBM, cap+1 does not
+    for i in (0, pp - 1):
+        hbm = cl.groups[groups[i]].device.hbm_gb
+
+        def mem(n):
+            st = tuple(StagePlacement(group=groups[k], n_layers=n,
+                                      dp=2, tp=tp, is_last=(k == pp - 1))
+                       for k in range(pp))
+            plan = ParallelPlan(stages=st, micro_bs=1, global_batch=32,
+                                seq_len=seq, schedule="1f1b")
+            return pred.peak_memory(plan)[i]
+
+        assert mem(max(caps[i], 1)) <= hbm * (1 + 1e-9) or caps[i] == 0
+        assert mem(caps[i] + 1) > hbm
+
+
+def test_planner_require_fit_reject_then_fit():
+    """A search that is infeasible without caps (the dp split overloads
+    the fast island) still returns a fitting plan because segmentation
+    caps redirect layers before scoring."""
+    dev = dataclasses.replace(C.GPU_A, hbm_gb=46.0)
+    slow = dataclasses.replace(dev, name="gpu-a-slow", mfu=dev.mfu / 4.0)
+    cl = C.ClusterSpec(groups=(C.NodeGroup(dev, 2), C.NodeGroup(slow, 2)))
+    res = planner.search(cl, LLAMA2_70B, global_batch=32, seq_len=4096,
+                         pp_options=[4], tp_options=[8],
+                         micro_bs_options=[1], require_fit=True,
+                         include_tp_comm=False)
+    assert res.prediction.fits
+    pred = PerformancePredictor(
+        cl, LLAMA2_70B, include_tp_comm=False)
+    for i, st_ in enumerate(res.plan.stages):
+        assert res.prediction.peak_mem_gb[i] < \
+            cl.groups[st_.group].device.hbm_gb
+
+
+# --------------------------------------------------- planner regression ---
+def test_planner_interleaved_sweep_no_worse_than_recorded():
+    """engine='fast' with the interleaved sweep enabled must return an
+    iter_time <= the PR-2 recorded plan on the paper's 96N768D benchmark
+    cluster (same quick-sweep arguments as the committed baseline)."""
+    base_path = (Path(__file__).resolve().parents[1] / "benchmarks"
+                 / "BENCH_planner.baseline.json")
+    base = json.loads(base_path.read_text())
+    assert base["quick"], "baseline must be the quick sweep"
+    import benchmarks  # noqa: F401 - only to locate the package root
+    from benchmarks._paper import hetero_cluster
+    cl = hetero_cluster(96)
+    res = planner.search(cl, LLAMA2_140B, global_batch=960, seq_len=4096,
+                         pp_options=[10, 12], tp_options=[8],
+                         micro_bs_options=[1], require_fit=False,
+                         include_tp_comm=False)
+    assert res.prediction.iter_time <= \
+        base["fast"]["iter_time_s"] * (1 + 1e-9)
+
+
+def test_planner_auto_picks_interleaved_when_profitable():
+    """Deep homogeneous pipeline, small m: interleaving is the textbook
+    win and schedule='auto' must find it — strictly better than the best
+    non-interleaved schedule."""
+    deep = dataclasses.replace(LLAMA2_70B, name="deep-80l", num_layers=80)
+    cl = C.homogeneous_cluster(C.GPU_A, 8)
+    kw = dict(global_batch=16, seq_len=4096, pp_options=[8],
+              tp_options=[8], micro_bs_options=[1], require_fit=False)
+    auto = planner.search(cl, deep, **kw)
+    assert auto.plan.schedule == "interleaved-1f1b"
+    assert auto.plan.vpp >= 2
+    assert sum(auto.plan.chunk_layers) == 80
+    for pinned in ("1f1b", "1f1b-eager", "gpipe"):
+        r = planner.search(cl, deep, schedule=pinned, **kw)
+        assert auto.prediction.iter_time < r.prediction.iter_time
