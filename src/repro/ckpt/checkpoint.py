@@ -13,8 +13,15 @@ Fault-tolerance contract:
   * reshardable: restore() takes target shardings — a post-failure replan
     with a different mesh/plan loads the same arrays and pjit re-lays them
     out (HETHUB elastic recovery, train/trainer.py);
+  * migratable: ``migrate`` reshards a train state between stacked-block
+    pipeline layouts (old plan -> new plan) purely in memory, so a replan
+    applies without restarting the process; the Trainer also records the
+    layout in the checkpoint manifest so a from-disk restore can migrate;
   * async: save_async() snapshots to host (device_get) synchronously, then
-    writes on a background thread so the train loop keeps stepping.
+    writes on a background thread so the train loop keeps stepping.  All
+    thread bookkeeping AND the keep-window GC run under one lock — GC
+    scanning the directory concurrently with a newer save's rename was a
+    race (it could act on a torn listing).
 """
 from __future__ import annotations
 
@@ -61,37 +68,71 @@ def save(ckpt_dir: str, step: int, state: Any,
 
 
 class AsyncCheckpointer:
-    """Snapshot-on-call, write-on-thread. One in-flight save at a time."""
+    """Snapshot-on-call, write-on-thread.  One in-flight save at a time.
+
+    Thread-safe: ``wait``/``save_async`` may race from different threads
+    (the train loop, a replan, a straggler hook).  The ``_thread`` swap
+    and the keep-window ``_gc`` both run under ``_lock`` — the historical
+    bug was a ``wait()`` returning concurrently with a fresh
+    ``save_async()``: the finished thread's ``_thread = None`` clobbered
+    the new registration, the next save started unsupervised, and its
+    rename raced the previous ``_gc``'s directory scan
+    (tests/test_replan.py locks this down)."""
 
     def __init__(self, ckpt_dir: str, keep: int = 3):
         self.dir = ckpt_dir
         self.keep = keep
+        self._lock = threading.Lock()
         self._thread: Optional[threading.Thread] = None
         self.last_error: Optional[BaseException] = None
 
     def wait(self):
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
-        if self.last_error is not None:
-            raise self.last_error
+        """Block until no save is in flight; re-raise (once) a background
+        save's error."""
+        while True:
+            with self._lock:
+                t = self._thread
+            if t is None:
+                break
+            t.join()
+            with self._lock:
+                if self._thread is t:   # only clear what we joined
+                    self._thread = None
+        with self._lock:
+            err, self.last_error = self.last_error, None
+        if err is not None:
+            raise err
 
     def save_async(self, step: int, state: Any,
                    extra: Optional[Dict] = None):
+        """Start a background save.  Like ``wait``, surfaces a PREVIOUS
+        background save's error here (once) before starting the new one —
+        a failed checkpoint must not go unnoticed until shutdown."""
         self.wait()
         host_state = jax.device_get(state)   # snapshot before mutation
 
         def work():
             try:
                 save(self.dir, step, host_state, extra)
-                self._gc()
+                with self._lock:     # gc under the same lock as completion
+                    self._gc()
             except BaseException as e:  # noqa: BLE001
-                self.last_error = e
+                with self._lock:
+                    self.last_error = e
 
-        self._thread = threading.Thread(target=work, daemon=True)
-        self._thread.start()
+        t = threading.Thread(target=work, daemon=True)
+        while True:
+            with self._lock:
+                if self._thread is None:
+                    # register AND start under the lock: a concurrent
+                    # wait() must never see (and join) an unstarted thread
+                    self._thread = t
+                    t.start()
+                    break
+            self.wait()   # lost a registration race: drain and retry
 
     def _gc(self):
+        # caller holds self._lock
         steps = sorted(all_steps(self.dir))
         for s in steps[:-self.keep]:
             shutil.rmtree(Path(self.dir) / f"step_{s:08d}",
@@ -113,6 +154,92 @@ def all_steps(ckpt_dir: str):
 def latest_step(ckpt_dir: str) -> Optional[int]:
     steps = all_steps(ckpt_dir)
     return steps[-1] if steps else None
+
+
+def manifest_extra(ckpt_dir: str, step: int) -> Dict:
+    """The ``extra`` dict a checkpoint was saved with (manifest-only read —
+    no arrays touched).  The Trainer stores the state's pipeline layout
+    here so a restore onto a different plan knows what to migrate from."""
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    return json.loads((d / "manifest.json").read_text()).get("extra", {})
+
+
+# ------------------------------------------------------- plan migration ----
+def plan_layout(plan) -> Optional[Dict[str, Any]]:
+    """A ParallelPlan's stacked-block layout as a JSON-able dict (what the
+    Trainer stamps into checkpoint manifests); None = the canonical
+    unstacked (L, ...) layout of a non-pipeline state."""
+    if plan is None:
+        return None
+    return {"pp": plan.pp, "vpp": plan.vpp,
+            "virtual_layers": list(plan.virtual_layers)}
+
+
+def _norm_layout(layout) -> Optional[Dict[str, Any]]:
+    if layout is None:
+        return None
+    if isinstance(layout, dict):
+        return {"pp": int(layout["pp"]), "vpp": int(layout["vpp"]),
+                "virtual_layers": [int(x) for x in layout["virtual_layers"]]}
+    return plan_layout(layout)   # a ParallelPlan (duck-typed)
+
+
+def _unstack_blocks(tree: Dict[str, Any], layout: Dict[str, Any]
+                    ) -> Dict[str, Any]:
+    """(pp, [vpp,] Lmax, ...) stacked blocks -> canonical (L, ...) order.
+    Virtual-stage order IS model-layer order (contiguous chunks, chunk c
+    of stage s at slot [s, c]); padded rows are dropped."""
+    import jax.numpy as jnp
+    pp, vpp = layout["pp"], layout["vpp"]
+    vl = layout["virtual_layers"]
+
+    def un(a):
+        pieces = []
+        for vs, ls in enumerate(vl):
+            s, c = vs % pp, vs // pp
+            pieces.append(a[s, c, :ls] if vpp > 1 else a[s, :ls])
+        return jnp.concatenate(pieces, axis=0)
+
+    out = dict(tree)
+    out["blocks"] = jax.tree.map(un, tree["blocks"])
+    return out
+
+
+def migrate(state: Any, old_plan, new_plan) -> Any:
+    """Reshard a train state across a plan change — the live half of the
+    HETHUB replan loop (train/trainer.py drives it; restart-free).
+
+    ``old_plan``/``new_plan`` are ParallelPlans, layout dicts (as stored
+    by ``plan_layout`` in checkpoint manifests), or None (canonical
+    unstacked layout).  Params and every optimizer moment tree (m, v,
+    master) move from the old stage/chunk assignment to the new one:
+    unstack to canonical layer order, restack per the new plan's
+    ``virtual_layers``.  Real layers are carried over bit-exactly (pure
+    gathers/concats); padding rows are re-created as zeros, matching a
+    fresh stacked init.  Works on host numpy and device arrays alike and
+    is traceable (jax.eval_shape uses it to derive layout shapes)."""
+    old = _norm_layout(old_plan)
+    new = _norm_layout(new_plan)
+    if old == new:
+        return state
+    from repro.parallel import pipeline
+
+    def tr(tree):
+        if old is not None:
+            tree = _unstack_blocks(tree, old)
+        if new is not None:
+            tree = pipeline.stack_blocks_for_stages(
+                tree, new["pp"], new["virtual_layers"], vpp=new["vpp"])
+        return tree
+
+    out = dict(state)
+    out["params"] = tr(state["params"])
+    opt = dict(state["opt"])
+    for k in ("m", "v", "master"):
+        if k in opt:
+            opt[k] = tr(opt[k])
+    out["opt"] = opt
+    return out
 
 
 def restore(ckpt_dir: str, step: int, target: Any,

@@ -87,6 +87,30 @@ class ClusterSpec:
         den = sum(g.n_accel * g.device.peak_tflops for g in self.groups)
         return num / den
 
+    def degrade(self, device_kind: str, factor: float) -> "ClusterSpec":
+        """Straggler-injection hook: the same topology with ``device_kind``'s
+        achievable throughput divided by ``factor`` (its homogeneous MFU is
+        scaled down, so ``effective_tflops`` drops by exactly ``factor``).
+
+        This is what drives the online-replan loop end-to-end: telemetry
+        detects sustained degradation, the caller builds the degraded spec,
+        and ``Trainer.replan`` re-searches against it — scaling any
+        *observed* profile entries of that kind by the same factor
+        (tests/test_replan.py)."""
+        if factor <= 0:
+            raise ValueError(f"degrade factor must be > 0, got {factor}")
+        if all(g.device.name != device_kind for g in self.groups):
+            known = sorted({g.device.name for g in self.groups})
+            raise ValueError(f"unknown device kind {device_kind!r}; "
+                             f"cluster has {known}")
+        groups = tuple(
+            dataclasses.replace(
+                g, device=dataclasses.replace(g.device,
+                                              mfu=g.device.mfu / factor))
+            if g.device.name == device_kind else g
+            for g in self.groups)
+        return dataclasses.replace(self, groups=groups)
+
     def link_gbps(self, ga: int, gb: int, transport: str = "gpu") -> float:
         """Effective Gb/s between node groups (indices into .groups)."""
         validate_transport(transport)

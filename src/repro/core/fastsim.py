@@ -42,8 +42,8 @@ from typing import List, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.simulator import (ScheduleError, SimReport, StageTiming,
-                                  interleaved_inflight_cap)
+from repro.core.simulator import (ScheduleError, SimEvent, SimReport,
+                                  StageTiming, interleaved_inflight_cap)
 
 
 def _chain_max(d: np.ndarray, c: np.ndarray) -> np.ndarray:
@@ -282,7 +282,8 @@ def _1f1b_eager(fa: np.ndarray, ba: np.ndarray, sa: np.ndarray, m: int,
 
 # --------------------------------------------------------- interleaved-1f1b --
 def _interleaved(fa: List[float], ba: List[float], sa: List[float], m: int,
-                 vpp: int, inflight_cap) -> Tuple[np.ndarray, list]:
+                 vpp: int, inflight_cap,
+                 trace=None) -> Tuple[np.ndarray, list]:
     """Bounded-lookahead heap DES replaying the oracle's greedy interleaved
     policy over V = pp*vpp virtual stages (timings in virtual order).
 
@@ -364,6 +365,9 @@ def _interleaved(fa: List[float], ba: List[float], sa: List[float], m: int,
             done_f[vs][j] = True
             pf[i] += 1
             inflight[i] += 1
+            if trace is not None:
+                trace.append(SimEvent(start=start, finish=free[i], stage=i,
+                                      vs=vs, microbatch=j, dir="F"))
             enqueue(i)
             # F(vs,j) enables F(vs+1,j) / B(V-1,j) iff it is the head of
             # the neighbor's stream (same-stage heads covered by enqueue(i))
@@ -377,6 +381,9 @@ def _interleaved(fa: List[float], ba: List[float], sa: List[float], m: int,
             done_b[vs][j] = True
             pb[i] += 1
             inflight[i] -= 1
+            if trace is not None:
+                trace.append(SimEvent(start=start, finish=free[i], stage=i,
+                                      vs=vs, microbatch=j, dir="B"))
             enqueue(i)
             # B(vs,j) enables B(vs-1,j) iff it heads the neighbor's stream
             if vs > 0:
@@ -449,10 +456,12 @@ def lower_bound(timings: Sequence[StageTiming], m: int,
 def simulate(timings: Sequence[StageTiming], m: int,
              schedule: str = "1f1b-eager", dp_allreduce: float = 0.0,
              overlap_dp: bool = True, eager_slack: int = 2, vpp: int = 1,
-             inflight_cap=None) -> SimReport:
+             inflight_cap=None, trace=None) -> SimReport:
     """Drop-in fast equivalent of ``simulator.simulate`` (``vpp`` /
-    ``inflight_cap`` apply to interleaved-1f1b only; ``timings`` are then
-    pp*vpp entries in virtual order)."""
+    ``inflight_cap`` / ``trace`` apply to interleaved-1f1b only; ``timings``
+    are then pp*vpp entries in virtual order, and ``trace`` is appended
+    with the executed ``SimEvent`` list — op-for-op equal to the
+    oracle's)."""
     pp = len(timings)
     f = [t.fwd for t in timings]
     b = [t.bwd for t in timings]
@@ -462,7 +471,7 @@ def simulate(timings: Sequence[StageTiming], m: int,
             raise ValueError(
                 f"interleaved-1f1b needs len(timings) divisible by vpp; "
                 f"got {pp} timings, vpp={vpp}")
-        last_b, busy = _interleaved(f, b, send, m, vpp, inflight_cap)
+        last_b, busy = _interleaved(f, b, send, m, vpp, inflight_cap, trace)
         end = float(last_b.max())
         if dp_allreduce > 0.0:
             if overlap_dp:

@@ -158,6 +158,7 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
            calibration: float = 1.0, require_fit: bool = True,
            include_tp_comm: bool = True,
            cost_source: Optional[costmodel.CostSource] = None,
+           baseline_plan: Optional[ParallelPlan] = None,
            engine: str = "fast") -> PlannerResult:
     """DFS over the three-level tree; returns the min-iter-time plan.
 
@@ -175,7 +176,13 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
     ``explore_orders`` also tries non-contiguous stage→group orders
     (fast islands at the pipeline ends); ``require_fit`` derives
     HBM-based ``max_layers`` caps from ``predictor.stage_max_layers`` so
-    infeasible splits are pruned at segmentation time."""
+    infeasible splits are pruned at segmentation time.
+
+    ``baseline_plan`` (fast engine only) scores an incumbent plan — e.g.
+    the one currently executing — as an extra candidate under the SAME
+    cost source, so a replan's winner is provably no worse than staying
+    put; an incumbent that no longer maps onto the cluster (node loss
+    removed its group) is skipped."""
     if engine == "reference":
         return _search_reference(
             cluster, cfg, global_batch=global_batch, seq_len=seq_len,
@@ -314,6 +321,16 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
     log: List[Tuple[str, float]] = []
     evaluated = 0
     pruned = 0
+    if baseline_plan is not None:
+        try:
+            p = pred.predict(baseline_plan)
+        except (IndexError, ValueError):
+            p = None   # incumbent doesn't map onto this cluster anymore
+        if p is not None:
+            evaluated += 1
+            log.append((f"baseline {baseline_plan.describe()}", p.iter_time))
+            if not (require_fit and not p.fits):
+                best = (p, baseline_plan)   # also seeds the pruning cutoff
     for lb, tag, micro_bs, vpp, chunk_layers, stages, timings in cands:
         if best is not None and lb >= best[0].iter_time:
             pruned += 1

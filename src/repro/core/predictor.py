@@ -242,25 +242,60 @@ class PerformancePredictor:
                                   plan.transport) * st.n_layers
                    for st in plan.stages)
 
+    def interleaved_peak_layers(self, plan: ParallelPlan,
+                                trace: Optional[List[simulator.SimEvent]]
+                                = None) -> List[int]:
+        """Per-physical-stage peak of layer-weighted in-flight
+        chunk-forwards for an interleaved plan — trace-EXACT: accounted
+        from the executed schedule's event trace under this predictor's
+        own timings (``trace`` reuses one already recorded by ``predict``;
+        otherwise the fast DES replays the plan here).  Replaces the
+        mean-chunk envelope, which mis-sized ragged ``chunk_layers``
+        splits in both directions."""
+        key = ("peakL", plan.stages, plan.micro_bs, plan.global_batch,
+               plan.seq_len, plan.transport, plan.vpp, plan.virtual_layers)
+        if self._memo and trace is None:
+            hit = self._dp_coeffs.get(key)
+            if hit is not None:
+                return hit
+        if trace is None:
+            trace = []
+            sim = (fastsim.simulate if self.sim_engine == "fast"
+                   else simulator.simulate)
+            sim(self.virtual_timings(plan), plan.micro_batches,
+                "interleaved-1f1b", vpp=plan.vpp, trace=trace)
+        out = simulator.trace_peak_layers(trace, plan.pp,
+                                          plan.virtual_layers)
+        if self._memo:
+            self._dp_coeffs[key] = out
+        return out
+
     def peak_memory(self, plan: ParallelPlan,
                     schedule: Optional[str] = None,
-                    eager_slack: Optional[int] = None) -> Tuple[float, ...]:
+                    eager_slack: Optional[int] = None,
+                    trace: Optional[List[simulator.SimEvent]] = None
+                    ) -> Tuple[float, ...]:
         schedule = schedule if schedule is not None else plan.schedule
         eager_slack = (eager_slack if eager_slack is not None
                        else plan.eager_slack)
-        vpp = plan.vpp if schedule == "interleaved-1f1b" else 1
         lc = self.src.layer_cost(self.cfg, plan.seq_len)
+        # interleaved: chunk-level accounting from the executed schedule's
+        # trace — the actual per-chunk in-flight mix, exact for ragged
+        # chunk_layers splits (no mean-chunk approximation)
+        peak_l = (self.interleaved_peak_layers(plan, trace)
+                  if schedule == "interleaved-1f1b" else None)
         out = []
         for i, st in enumerate(plan.stages):
             params = lc.param_bytes * st.n_layers / st.tp
             opt = params * (6.0 + 2.0 / st.dp)  # fp32 master+m+v ZeRO-1-ish
-            # interleaved: n_mb counts in-flight CHUNKS of ~n_layers/vpp
-            # layers each (the stage's chunks are near-equal by
-            # construction — dp_split assigns at chunk granularity)
-            n_mb = simulator.peak_activation_microbatches(
-                i, plan.pp, plan.micro_batches, schedule, eager_slack, vpp)
-            acts = (lc.act_bytes_per_token * plan.stage_micro_bs(i)
-                    * plan.seq_len * (st.n_layers / vpp) / st.tp) * n_mb
+            per_tok = (lc.act_bytes_per_token * plan.stage_micro_bs(i)
+                       * plan.seq_len / st.tp)
+            if peak_l is not None:
+                acts = per_tok * peak_l[i]
+            else:
+                n_mb = simulator.peak_activation_microbatches(
+                    i, plan.pp, plan.micro_batches, schedule, eager_slack)
+                acts = per_tok * st.n_layers * n_mb
             out.append((params + opt + acts) / 1e9)
         return tuple(out)
 
@@ -305,16 +340,20 @@ class PerformancePredictor:
                            for i in range(plan.pp)]
         sim = (fastsim.simulate if self.sim_engine == "fast"
                else simulator.simulate)
+        # interleaved: record the executed trace during scoring and reuse
+        # it for the chunk-level peak-memory accounting (one DES per leaf)
+        trace = [] if schedule == "interleaved-1f1b" else None
         rep = sim(timings, plan.micro_batches, schedule,
                   dp_allreduce=self.dp_allreduce_time(plan),
-                  overlap_dp=overlap_dp, eager_slack=eager_slack, vpp=vpp)
+                  overlap_dp=overlap_dp, eager_slack=eager_slack, vpp=vpp,
+                  trace=trace)
         S = plan.n_accel
         tokens = plan.global_batch * plan.seq_len
         tgs = tokens / (S * rep.iter_time)               # Eq.1
         model_flops = self.cfg.flops_per_token(plan.seq_len) * 3.0  # fwd+bwd
         tested_tflops = tokens * model_flops / (rep.iter_time * S) / 1e12
         mfu = tested_tflops / self.cluster.peak_tflops_mean   # Eq.2
-        mems = self.peak_memory(plan, schedule, eager_slack)
+        mems = self.peak_memory(plan, schedule, eager_slack, trace=trace)
         fits = all(m < self.cluster.groups[st.group].device.hbm_gb
                    for m, st in zip(mems, plan.stages))
         return Prediction(iter_time=rep.iter_time, tgs=tgs, mfu=mfu,

@@ -351,6 +351,35 @@ def simulate(timings: Sequence[StageTiming], m: int,
                           overlap_dp)
 
 
+def trace_peak_layers(trace: Sequence[SimEvent], pp: int,
+                      virtual_layers: Sequence[int]) -> List[int]:
+    """Per-physical-stage peak of LAYER-WEIGHTED in-flight chunk-forwards,
+    accounted from an executed interleaved trace: +layers(vs) at each
+    chunk-forward, -layers(vs) when its backward retires it, peak over the
+    (start-ordered, backwards-first-on-ties) event sequence.
+
+    This is the chunk-level activation accounting ``predictor.peak_memory``
+    uses for interleaved plans: with ragged ``chunk_layers`` the in-flight
+    MIX matters — a stage whose big chunk dominates the warmup ramp peaks
+    strictly above the mean-chunk envelope (layers/vpp x in-flight count),
+    which both under- and over-estimated depending on which chunks were in
+    flight (ROADMAP: chunk-level memory accounting)."""
+    per_stage: List[List[SimEvent]] = [[] for _ in range(pp)]
+    for e in trace:
+        per_stage[e.stage].append(e)
+    peaks = []
+    for evs in per_stage:
+        evs.sort(key=lambda e: (e.start, e.dir == "F"))
+        cur = peak = 0
+        for e in evs:
+            w = virtual_layers[e.vs]
+            cur += w if e.dir == "F" else -w
+            if cur > peak:
+                peak = cur
+        peaks.append(peak)
+    return peaks
+
+
 def peak_activation_microbatches(stage: int, pp: int, m: int,
                                  schedule: str = "1f1b",
                                  eager_slack: int = 2, vpp: int = 1) -> int:

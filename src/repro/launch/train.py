@@ -6,6 +6,12 @@
 Runs the full production loop on whatever devices exist (CPU included):
 planner (when a cluster is given) -> sharded init -> train loop with async
 checkpointing, straggler telemetry and elastic-replan hooks.
+
+``--pp N`` runs the HETHUB pipeline end-to-end: the automatic parallel
+planner searches a plan over a paper-preset heterogeneous cluster, the
+trainer executes it through the SPMD pipeline step with online stage
+telemetry, and ``--degrade KIND:FACTOR`` injects a straggler after the
+warmup steps to drive a live replan + state migration mid-run.
 """
 from __future__ import annotations
 
@@ -33,6 +39,14 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--pp", type=int, default=0,
+                    help="run a planner-searched pp-stage pipeline with "
+                         "online stage telemetry (0 = plain DP step)")
+    ap.add_argument("--telemetry", default="auto",
+                    choices=["auto", "callback", "timer", "off"])
+    ap.add_argument("--degrade", default="",
+                    help="KIND:FACTOR straggler injection after half the "
+                         "steps -> live replan + migration (needs --pp)")
     args = ap.parse_args()
 
     if args.arch == "llama-100m":
@@ -48,10 +62,28 @@ def main():
 
     n_dev = len(jax.devices())
     mesh = jax.make_mesh((n_dev, 1), ("data", "model"))
+    cluster = plan = store = None
+    if args.pp:
+        from repro.core import cluster as cluster_mod, planner
+        from repro.profile.store import ProfileStore
+        cluster = cluster_mod.ClusterSpec(groups=(
+            cluster_mod.NodeGroup(cluster_mod.AMD, 1, accel_per_node=1),
+            cluster_mod.NodeGroup(cluster_mod.GPU_A, 1, accel_per_node=1)))
+        plan = planner.search(
+            cluster, bundle.cfg, global_batch=args.global_batch,
+            seq_len=args.seq, pp_options=[args.pp], tp_options=[1],
+            micro_bs_options=[1, 2], require_fit=False,
+            include_tp_comm=False).plan
+        print(f"[train] plan: {plan.describe()}")
+        # the telemetry folds land here, so the degrade replan below
+        # searches against observed (scaled) costs once dense enough
+        store = ProfileStore()
     t = Trainer(bundle, mesh,
                 TrainerConfig(global_batch=args.global_batch,
                               seq_len=args.seq, ckpt_dir=args.ckpt_dir,
-                              ckpt_every=args.ckpt_every),
+                              ckpt_every=args.ckpt_every,
+                              telemetry=args.telemetry),
+                cluster=cluster, plan=plan, profile_store=store,
                 opt_cfg=AdamWConfig(lr=args.lr, warmup_steps=20))
     n_params = sum(x.size for x in jax.tree.leaves(t.state["params"]))
     print(f"[train] arch={bundle.cfg.name} params={n_params/1e6:.1f}M "
@@ -66,8 +98,24 @@ def main():
         tok_s = done * args.global_batch * args.seq / dt
         print(f"[train] step={t.step} loss={r['losses'][-1]:.4f} "
               f"tok/s={tok_s:.0f}")
+        if args.degrade and plan is not None and done >= args.steps // 2:
+            kind, factor = args.degrade.split(":")
+            degraded = t.cluster.degrade(kind, float(factor))
+            res = t.replan(degraded, global_batch=args.global_batch,
+                           seq_len=args.seq, pp_options=[args.pp],
+                           tp_options=[1], micro_bs_options=[1, 2],
+                           require_fit=False, include_tp_comm=False)
+            plan = res.plan
+            print(f"[train] degraded {args.degrade} -> replanned: "
+                  f"{plan.describe()} (migrations={t.migrations})")
+            args.degrade = ""
+        health = t.schedule_health()
+        if health is not None:
+            print(f"[train] bubble observed={health['observed_bubble']:.3f} "
+                  f"predicted={health['predicted_bubble']:.3f}")
     print(json.dumps({"final_loss": r["losses"][-1], "steps": t.step,
-                      "params_m": round(n_params / 1e6, 1)}))
+                      "params_m": round(n_params / 1e6, 1),
+                      "replans": t.replans}))
 
 
 if __name__ == "__main__":

@@ -40,6 +40,27 @@ from repro.models.layers import rmsnorm
 from repro.train.steps import cross_entropy, constrain, AUX_COEF
 
 
+def _stage_axis(mesh) -> Optional[str]:
+    """'pod' when the mesh has a pod axis (or no mesh is bound yet — the
+    constraint then no-ops at trace time); None when a pod-less mesh is
+    active, so the trainer's CPU-mesh pipeline mode runs the identical
+    program unsharded on the stage dim."""
+    if mesh is None:
+        return "pod"
+    return "pod" if "pod" in getattr(mesh, "axis_names", ()) else None
+
+
+def _tick_mark(telemetry, t: int, probe) -> None:
+    """Ordered host-callback tick boundary for the telemetry recorder.
+    ``probe`` is a scalar slice of the tick's output, making the callback
+    data-dependent on the tick's compute (it cannot be hoisted); fires
+    once per tick during the forward pass only (jax.checkpoint remats
+    re-run block bodies, not this top-level marker)."""
+    if telemetry is None:
+        return
+    jax.debug.callback(telemetry.on_tick, t, probe, ordered=True)
+
+
 def stack_blocks_for_stages(params: Dict[str, Any], n_stages: int,
                             layers_per_stage: Optional[Sequence[int]] = None,
                             vpp: int = 1) -> Dict[str, Any]:
@@ -101,7 +122,7 @@ def pp_param_specs(specs: Dict[str, Any]) -> Dict[str, Any]:
 def make_pp_loss_fn(cfg: ModelConfig, mesh, n_stages: int,
                     n_microbatches: int,
                     layers_per_stage: Optional[Sequence[int]] = None,
-                    vpp: int = 1):
+                    vpp: int = 1, telemetry=None):
     """Builds loss_fn(params, batch) running the pod-axis pipeline.
 
     ``vpp > 1`` runs interleaved virtual stages: params stacked
@@ -110,14 +131,18 @@ def make_pp_loss_fn(cfg: ModelConfig, mesh, n_stages: int,
     activation buffer walks all n_stages*vpp virtual slots — chunk c of
     pod s computes virtual stage c*n_stages + s, the roll returns wrapped
     activations to pod 0 at the next chunk (the planner's
-    interleaved-1f1b wrap-around hop)."""
+    interleaved-1f1b wrap-around hop).
+
+    ``telemetry`` (repro.telemetry.StageTelemetry) inserts ordered
+    host-callback tick boundaries so the trainer can observe per-stage
+    compute and bubble online (the HETHUB closed loop)."""
     kinds = cfg.layer_kinds()
     kind = kinds[0]
     assert len(set(kinds)) == 1, "PP requires a uniform scanned stack"
     m = n_microbatches
     if vpp > 1:
         return _make_pp_loss_fn_vpp(cfg, mesh, n_stages, m,
-                                    layers_per_stage, vpp, kind)
+                                    layers_per_stage, vpp, kind, telemetry)
 
     if layers_per_stage is not None:
         lmax = max(layers_per_stage)
@@ -140,7 +165,7 @@ def make_pp_loss_fn(cfg: ModelConfig, mesh, n_stages: int,
         x, auxs = jax.lax.scan(body, x, (blocks, mask))
         return x, jnp.sum(auxs)
 
-    buf_spec = P("pod", ("data",),
+    buf_spec = P(_stage_axis(mesh), ("data",),
                  "model" if cfg.act_sharding else None, None)
 
     def loss_fn(params, batch):
@@ -168,6 +193,7 @@ def make_pp_loss_fn(cfg: ModelConfig, mesh, n_stages: int,
                 buf = buf.at[0].set(inject.astype(cfg.adtype))
             buf = constrain(buf, buf_spec)
             out, auxs = jax.vmap(stage_fn)(blocks, mask, buf)
+            _tick_mark(telemetry, t, out[-1, 0, 0, 0])
             j_out = t - (n_stages - 1)   # microbatch finishing this tick
             if 0 <= j_out < m:
                 h = rmsnorm(params["final_norm"], out[-1], cfg.norm_eps)
@@ -180,6 +206,7 @@ def make_pp_loss_fn(cfg: ModelConfig, mesh, n_stages: int,
             out = constrain(out, buf_spec)
             buf = jnp.roll(out, 1, axis=0)   # collective-permute over 'pod'
 
+        _tick_mark(telemetry, m + n_stages - 1, loss_sum)
         loss = loss_sum / m + AUX_COEF * (aux_sum / m)
         return loss, {"ce": loss_sum / m, "aux": aux_sum / m}
 
@@ -188,7 +215,7 @@ def make_pp_loss_fn(cfg: ModelConfig, mesh, n_stages: int,
 
 def _make_pp_loss_fn_vpp(cfg: ModelConfig, mesh, n_stages: int, m: int,
                          layers_per_stage: Optional[Sequence[int]],
-                         vpp: int, kind: str):
+                         vpp: int, kind: str, telemetry=None):
     """Interleaved virtual-stage pipeline: the (n_stages, vpp, B, S, D)
     buffer holds one in-flight microbatch per VIRTUAL stage; each tick runs
     every (pod, chunk) slot, then activations shift one virtual slot —
@@ -226,7 +253,7 @@ def _make_pp_loss_fn_vpp(cfg: ModelConfig, mesh, n_stages: int, m: int,
         x, auxs = jax.lax.scan(body, x, (blocks, mask))
         return x, jnp.sum(auxs)
 
-    buf_spec = P("pod", None, ("data",),
+    buf_spec = P(_stage_axis(mesh), None, ("data",),
                  "model" if cfg.act_sharding else None, None)
 
     def loss_fn(params, batch):
@@ -254,6 +281,7 @@ def _make_pp_loss_fn_vpp(cfg: ModelConfig, mesh, n_stages: int, m: int,
                 buf = buf.at[0, 0].set(inject.astype(cfg.adtype))
             buf = constrain(buf, buf_spec)
             out, auxs = jax.vmap(jax.vmap(stage_fn))(blocks, mask, buf)
+            _tick_mark(telemetry, t, out[-1, -1, 0, 0, 0])
             j_out = t - (V - 1)          # microbatch finishing this tick
             if 0 <= j_out < m:
                 h = rmsnorm(params["final_norm"], out[-1, -1], cfg.norm_eps)
@@ -270,6 +298,7 @@ def _make_pp_loss_fn_vpp(cfg: ModelConfig, mesh, n_stages: int, m: int,
             rolled = jnp.roll(out, 1, axis=0)
             buf = rolled.at[0].set(jnp.roll(rolled[0], 1, axis=0))
 
+        _tick_mark(telemetry, m + V - 1, loss_sum)
         loss = loss_sum / m + AUX_COEF * (aux_sum / m)
         return loss, {"ce": loss_sum / m, "aux": aux_sum / m}
 

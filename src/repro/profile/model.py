@@ -6,17 +6,27 @@ the analytic model when the requested point is missing from the profile, so
 a partial sweep still produces a usable cost source — the profile narrows
 the gap measurement by measurement instead of gating on completeness.
 
-Ops consumed (written by repro.profile.runner and launch/dryrun):
+Ops consumed (written by repro.profile.runner, launch/dryrun, and the
+Trainer's online telemetry):
   layer_cost       {arch, seq_len} -> flops_fwd / param_bytes /
                    act_bytes_per_token    (HLO-derived; device_kind 'hlo')
   embedding_flops  {arch}          -> flops
   layer_step       {arch, seq_len, micro_bs, tp} -> fwd_s / bwd_s
                    (wall-time measured per layer on a real device)
+  observed_stage_tick  {arch, seq_len, tp, schedule, stage, pp, vpp,
+                   layers, padded_layers, micro_bs} -> tick_s
+                   (online per-stage telemetry: repro.telemetry)
+  observed_bubble  {arch, schedule, pp, vpp, m} -> bubble_frac
   link             {scope[, transport]} -> gbps  (measured collectives)
 
 ``device_map`` translates ClusterSpec device names to profile device kinds
 (profile a small sample of one device type, predict a cluster of them —
-the paper's methodology).
+the paper's methodology).  ``time_scale`` multiplies profile-served
+COMPUTE times for a queried device name (applied before the device_map
+translation): the replan path uses it to project a degraded cluster onto
+healthy observations — "we measured X on that kind; it now runs
+``factor``x slower" (``ClusterSpec.degrade``).  The analytic fallback is
+never scaled: it already reads the degraded spec's effective TFLOPs.
 """
 from __future__ import annotations
 
@@ -35,10 +45,12 @@ CALIB_DEVICE = "hlo"
 class ProfiledCostModel:
     def __init__(self, store: ProfileStore,
                  fallback: Optional[costmodel.CostSource] = None,
-                 device_map: Optional[Dict[str, str]] = None):
+                 device_map: Optional[Dict[str, str]] = None,
+                 time_scale: Optional[Dict[str, float]] = None):
         self.store = store
         self.fallback = fallback or costmodel.AnalyticCostSource()
         self.device_map = dict(device_map or {})
+        self.time_scale = dict(time_scale or {})
         self.hits = 0       # profile-served reads (observability: how much
         self.misses = 0     # of a prediction actually rests on measurement)
 
@@ -50,6 +62,10 @@ class ProfiledCostModel:
     # ------------------------------------------------------------ helpers --
     def _dev(self, name: str) -> str:
         return self.device_map.get(name, name)
+
+    def _scale(self, name: str) -> float:
+        """Degradation scale for a queried device NAME (pre-device_map)."""
+        return self.time_scale.get(name, 1.0)
 
     def _interp(self, device_kind: str, op: str, shape: dict,
                 field: str) -> Optional[float]:
@@ -106,12 +122,20 @@ class ProfiledCostModel:
     def layer_time(self, device_kind: str, cfg: ModelConfig, seq_len: int,
                    micro_bs: int, tp: int) -> Optional[Tuple[float, float]]:
         dev = self._dev(device_kind)
+        sc = self._scale(device_kind)
         shape = {"arch": cfg.name, "seq_len": seq_len,
                  "micro_bs": micro_bs, "tp": tp}
         fwd = self._interp(dev, "layer_step", shape, "fwd_s")
         bwd = self._interp(dev, "layer_step", shape, "bwd_s")
         if fwd is not None and bwd is not None:
-            return fwd, bwd
+            return sc * fwd, sc * bwd
+        # online telemetry: per-stage tick observations normalized to
+        # per-layer per-sequence FORWARD seconds (padded depth — that is
+        # what the slot executes), fwd:bwd split 1:2 as everywhere else
+        per_seq = self.stage_tick_per_layer(dev, cfg, seq_len, tp)
+        if per_seq is not None:
+            fwd_t = per_seq * micro_bs
+            return sc * fwd_t, sc * 2.0 * fwd_t
         # online refinement fallback: the Trainer folds whole observed step
         # wall-times as per-layer per-sequence ``observed_layer_step``
         # entries (a step observation cannot separate microbatch sizes).
@@ -124,6 +148,45 @@ class ProfiledCostModel:
                                 "tp": tp}, "per_seq_s")
         if per_seq is not None:
             step = per_seq * micro_bs
-            return step / 3.0, 2.0 * step / 3.0
+            return sc * step / 3.0, sc * 2.0 * step / 3.0
         return self.fallback.layer_time(device_kind, cfg, seq_len,
                                         micro_bs, tp)
+
+    # ------------------------------------------------- telemetry entries --
+    def stage_tick_per_layer(self, dev: str, cfg: ModelConfig, seq_len: int,
+                             tp: int) -> Optional[float]:
+        """n-weighted mean per-layer per-sequence forward seconds over all
+        ``observed_stage_tick`` entries matching (device kind, arch,
+        seq_len, tp) — any schedule/stage/pp/vpp: every observation is one
+        more sample of how fast this device kind runs one (padded) layer.
+        Returns None when no telemetry exists for the pair (the caller
+        falls down the serving hierarchy)."""
+        num = den = 0.0
+        for e in self.store.entries(dev, "observed_stage_tick"):
+            s = e.shape
+            if (s.get("arch") != cfg.name or s.get("seq_len") != seq_len
+                    or s.get("tp") != tp or "tick_s" not in e.value):
+                continue
+            depth = s.get("padded_layers") or s.get("layers") or 0
+            mbs = s.get("micro_bs", 0)
+            if depth <= 0 or mbs <= 0:
+                continue
+            n = e.value.get("n", 1.0)
+            num += n * e.value["tick_s"] / (depth * mbs)
+            den += n
+        if den <= 0.0:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return num / den
+
+    def observed_bubble(self, device_kind: str, cfg: ModelConfig,
+                        schedule: str, pp: int, vpp: int,
+                        m: int) -> Optional[float]:
+        """Observed bubble fraction for a (device kind, schedule) pair,
+        interpolated over the numeric (pp, vpp, m) axes.  None when the
+        pair was never observed — the caller falls back to the predictor's
+        simulated bubble (tests/test_profile.py)."""
+        return self._interp(self._dev(device_kind), "observed_bubble",
+                            {"arch": cfg.name, "schedule": schedule,
+                             "pp": pp, "vpp": vpp, "m": m}, "bubble_frac")

@@ -1,0 +1,8 @@
+"""Online stage telemetry (the observation half of HETHUB's closed loop).
+
+``StageTelemetry`` records per-stage/per-tick compute times and
+per-schedule bubble observations from the executing pipeline train step;
+the Trainer folds them into its online profile as ``observed_stage_tick``
+/ ``observed_bubble`` entries, which the schedule-aware replan consumes.
+"""
+from repro.telemetry.recorder import StageTelemetry  # noqa: F401

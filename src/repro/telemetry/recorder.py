@@ -1,0 +1,233 @@
+"""Per-stage / per-tick pipeline telemetry recorder.
+
+The SPMD pipeline (repro.parallel.pipeline) executes m + pp*vpp - 1
+synchronous ticks per step; virtual slot ``vs`` does USEFUL work at tick
+``t`` iff 0 <= t - vs < m, but — being SPMD — every slot computes its
+padded layer stack every tick (masked layers are identity).  Two
+recording modes:
+
+  * ``callback`` — ordered host callbacks at every tick boundary
+    (``jax.debug.callback`` with a data-dependent probe, fired once per
+    tick during the forward pass only).  This measures the real per-tick
+    wall times, i.e. the pipeline's tick structure.  Per-stage
+    attribution: on a single-process (CPU) mesh all slots run the same
+    padded depth serially on one host, so each tick's time is shared
+    equally across slots — which is also what the executed program truly
+    does; on a real multi-host deployment each process records its own
+    pod, so a tick's time IS that stage's compute and the same recorder
+    yields genuinely per-device-kind skew.
+  * ``timer`` — no host callbacks on the hot path.  Whole-step wall times
+    are folded in buckets of ``bucket_steps`` and converted to per-tick
+    times under the repo's standing fwd:bwd 1:2 split.  Cheap, and the
+    right mode on a device farm where per-tick callbacks would sync the
+    step.
+
+Both modes emit the same observations, distinguished by provenance
+(``meta["telemetry"]``).  ``fold_into`` writes them into a repro.profile
+ProfileStore under two entry kinds:
+
+  observed_stage_tick  {arch, seq_len, tp, schedule, stage, pp, vpp,
+                        layers, padded_layers, micro_bs} -> tick_s
+      forward seconds one PHYSICAL stage spends per tick (its vpp chunks
+      summed), folded as a running mean under the device kind hosting the
+      stage.  ``padded_layers`` is the layer depth the slot actually
+      computes (masked padding included) — per-layer normalization must
+      divide by it, not by the real ``layers``;
+  observed_bubble      {arch, schedule, pp, vpp, m} -> bubble_frac
+      observed pipeline bubble: 1 - activity-weighted busy share over the
+      measured tick times, folded under every participating device kind.
+      Comparing it against the predictor's bubble for the same schedule
+      is what separates "slow kernels" (stage ticks up, bubble flat) from
+      "wrong schedule" (bubble up) — ROADMAP item 4.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+MODES = ("callback", "timer")
+
+# floor for recorded times: a zero would poison per-layer divisions
+_EPS_S = 1e-12
+
+
+class StageTelemetry:
+    def __init__(self, pp: int, vpp: int, m: int, mode: str = "callback",
+                 drop_first: bool = True, bucket_steps: int = 1):
+        if mode not in MODES:
+            raise ValueError(f"unknown telemetry mode {mode!r}; "
+                             f"valid modes: {MODES}")
+        if pp < 1 or vpp < 1 or m < 1:
+            raise ValueError(f"need pp, vpp, m >= 1; got {pp}, {vpp}, {m}")
+        self.pp = pp
+        self.vpp = vpp
+        self.m = m
+        self.mode = mode
+        self.drop_first = drop_first
+        self.bucket_steps = max(1, bucket_steps)
+        self.V = pp * vpp
+        self.n_ticks = m + self.V - 1
+        self.steps = 0                  # completed (kept) step observations
+        self._dropped = False
+        self._marks: List[float] = []   # current step's tick timestamps
+        self._fresh: List[List[float]] = []   # per-step tick durations,
+        #                                       not yet folded into a store
+        self._bucket: List[float] = []  # timer mode: step times in bucket
+        self._last_ticks: Optional[List[float]] = None
+        self._last_bubble: Optional[float] = None
+        self._folds = 0
+
+    # ------------------------------------------------- callback endpoint --
+    def on_tick(self, t, _probe=None) -> None:
+        """Host-callback endpoint: called (in order) at the end of every
+        pipeline tick with the tick index, plus once with ``t == n_ticks``
+        after the last tick retires.  ``_probe`` is a throwaway scalar that
+        ties the callback to the tick's data so it cannot be hoisted.
+        Ignored outside callback mode: timer mode records through
+        ``observe_step`` only (no double counting if a caller wired the
+        marks anyway)."""
+        if self.mode != "callback":
+            return
+        t = int(t)
+        now = time.perf_counter()
+        if t == 0:
+            self._marks = [now]       # discards any torn previous sequence
+            return
+        if t != len(self._marks):     # torn sequence (retrace, skipped tick)
+            self._marks = []
+            return
+        self._marks.append(now)
+        if t == self.n_ticks:
+            diffs = [b - a for a, b in zip(self._marks, self._marks[1:])]
+            self._marks = []
+            # marks fire at end-of-tick: diffs are ticks 1..n_ticks-1 plus
+            # the (near-zero) post-loop closing gap.  Tick 0's duration is
+            # unobservable (no mark precedes the step) and inherits the
+            # mean of the observed ticks.
+            ticks = diffs[:-1]
+            mean = (sum(ticks) / len(ticks) if ticks
+                    else max(_EPS_S, diffs[-1]))
+            self._record([mean] + ticks)
+
+    # ----------------------------------------------------- timer endpoint --
+    def observe_step(self, dt: float) -> None:
+        """Cheap step-bucketed path: fold one whole-step wall time.  Only
+        the mean over each ``bucket_steps`` window is recorded; the
+        forward pipeline section is taken as dt/3 (fwd:bwd 1:2) and spread
+        evenly over the ticks."""
+        if self.mode != "timer":
+            return
+        self._bucket.append(float(dt))
+        if len(self._bucket) < self.bucket_steps:
+            return
+        mean = sum(self._bucket) / len(self._bucket)
+        self._bucket = []
+        per_tick = max(_EPS_S, mean / 3.0 / self.n_ticks)
+        self._record([per_tick] * self.n_ticks)
+
+    # ----------------------------------------------------------- analysis --
+    # un-folded observations kept at most this many steps: a trainer
+    # running without a profile store must not grow memory without bound
+    MAX_FRESH = 256
+
+    def _record(self, durs: List[float]) -> None:
+        if self.drop_first and not self._dropped:
+            self._dropped = True      # first step pays jit compile/caches
+            return
+        self.steps += 1
+        self._fresh.append(durs)
+        if len(self._fresh) > self.MAX_FRESH:
+            del self._fresh[:-self.MAX_FRESH]
+        self._last_ticks = self._stage_ticks(durs)
+        self._last_bubble = self._bubble_of(durs)
+
+    def _active(self, t: int) -> int:
+        """Virtual slots doing useful (unmasked) work at tick t."""
+        return min(t, self.V - 1) - max(0, t - self.m + 1) + 1
+
+    def _stage_ticks(self, durs: List[float]) -> List[float]:
+        """Per-VIRTUAL-slot forward seconds per tick.  Single-process
+        attribution: every slot computes the same padded depth every tick,
+        so the mean tick time is shared equally — exact for the executed
+        SPMD program on one host (a multi-host run records per-pod times
+        here instead)."""
+        mean = sum(durs) / len(durs)
+        return [max(_EPS_S, mean / self.V)] * self.V
+
+    def _bubble_of(self, durs: List[float]) -> float:
+        """Observed bubble: 1 - activity-weighted busy share of the
+        measured tick times (the SPMD runtime computes every slot every
+        tick, but only the active ones advance a microbatch)."""
+        span = sum(durs)
+        if span <= 0.0:
+            return 0.0
+        busy = sum(d * self._active(t) for t, d in enumerate(durs)) / self.V
+        return max(0.0, 1.0 - busy / span)
+
+    def stage_ticks(self) -> Optional[List[float]]:
+        """Most recent per-VIRTUAL-slot forward tick seconds (virtual
+        order), or None before the first kept observation."""
+        return list(self._last_ticks) if self._last_ticks else None
+
+    def bubble(self) -> Optional[float]:
+        return self._last_bubble
+
+    # --------------------------------------------------------------- fold --
+    def fold_into(self, store, device_kinds: Sequence[str], *, arch: str,
+                  seq_len: int, tp: int, schedule: str,
+                  layers_per_vstage: Sequence[int],
+                  padded_per_stage: Sequence[int],
+                  micro_bs_per_stage: Sequence[int]) -> int:
+        """Fold every not-yet-folded step observation into ``store`` as
+        ``observed_stage_tick`` / ``observed_bubble`` running means.
+        ``device_kinds`` names the device kind hosting each PHYSICAL
+        stage; ``padded_per_stage`` its executed (padding included) layer
+        depth per tick.  Returns the number of steps folded."""
+        folded = 0
+        meta_extra = {"telemetry": self.mode}
+        for durs in self._fresh:
+            ticks = self._stage_ticks(durs)
+            bub = self._bubble_of(durs)
+            for i in range(self.pp):
+                tick_s = sum(ticks[ch * self.pp + i]
+                             for ch in range(self.vpp))
+                layers = sum(layers_per_vstage[ch * self.pp + i]
+                             for ch in range(self.vpp))
+                e = store.fold(
+                    device_kinds[i], "observed_stage_tick",
+                    {"arch": arch, "seq_len": seq_len, "tp": tp,
+                     "schedule": schedule, "stage": i, "pp": self.pp,
+                     "vpp": self.vpp, "layers": layers,
+                     "padded_layers": padded_per_stage[i],
+                     "micro_bs": micro_bs_per_stage[i]},
+                    "tick_s", tick_s)
+                e.meta.update(meta_extra)
+            for dev in dict.fromkeys(device_kinds):
+                e = store.fold(
+                    dev, "observed_bubble",
+                    {"arch": arch, "schedule": schedule, "pp": self.pp,
+                     "vpp": self.vpp, "m": self.m},
+                    "bubble_frac", bub)
+                e.meta.update(meta_extra)
+            folded += 1
+        self._fresh = []
+        self._folds += folded
+        return folded
+
+    # ----------------------------------------------------------- artifact --
+    def to_dict(self) -> Dict:
+        return {"pp": self.pp, "vpp": self.vpp, "m": self.m,
+                "mode": self.mode, "steps": self.steps,
+                "folds": self._folds,
+                "stage_ticks": self.stage_ticks(),
+                "bubble": self._last_bubble}
+
+    def dump(self, path) -> Path:
+        """Write the telemetry snapshot as a JSON artifact (CI uploads it
+        when the replan e2e job fails)."""
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(self.to_dict(), indent=1))
+        return path

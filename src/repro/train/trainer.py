@@ -2,17 +2,24 @@
 
   * periodic async checkpointing (atomic, resharding-on-restore);
   * crash/restart recovery: resume from the latest complete checkpoint,
-    data pipeline state included;
+    data pipeline state included — migrating the state's pipeline layout
+    when the checkpoint was written under a different plan;
+  * pipeline execution: given a ParallelPlan with pp > 1 the trainer runs
+    the plan's own SPMD pipeline step (repro.parallel.pipeline) with the
+    plan's stage/chunk layer assignment and schedule-matched telemetry;
+  * online stage telemetry (repro.telemetry): per-stage/per-tick compute
+    and per-schedule bubble observations folded into the profile store as
+    ``observed_stage_tick`` / ``observed_bubble`` entries — the closed
+    loop the paper's predictor+planner need to track reality;
   * straggler mitigation: per-step wall times feed an EWMA; sustained
-    degradation beyond ``straggler_factor`` triggers the replan hook with a
-    degraded ClusterSpec;
-  * online profile refinement (the paper's profiling loop run online): when
-    constructed with a ProfileStore, observed step wall-times are folded
-    back into the profile as running means, so the planner's next search —
-    including the replan path below — scores plans against reality;
+    degradation beyond ``straggler_factor`` triggers the replan hook with
+    a degraded ClusterSpec (``ClusterSpec.degrade``);
   * elastic scaling / node failure: ``replan(new_cluster)`` re-runs the
-    automatic parallel planner on the surviving cluster, rebuilds the step,
-    and reshards the latest checkpoint onto the new layout.
+    automatic parallel planner on the surviving cluster — against the
+    online profile once dense enough, with degradation-scaled observed
+    times and the incumbent plan as the search baseline — then LIVE
+    MIGRATES the optimizer+param state onto the new plan's stage/chunk
+    assignment (in-memory reshard; checkpoint round-trip fallback).
 """
 from __future__ import annotations
 
@@ -21,7 +28,6 @@ import time
 from typing import Any, Callable, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -32,7 +38,9 @@ from repro.ckpt import checkpoint as ckpt
 from repro.data.pipeline import DataState, SyntheticTokens
 from repro.models.registry import ArchBundle
 from repro.optim.adamw import AdamWConfig
+from repro.parallel import pipeline
 from repro.parallel.sharding import ShardingRules
+from repro.telemetry import StageTelemetry
 from repro.train import steps as steps_mod
 from repro.utils import compat
 
@@ -51,6 +59,10 @@ class TrainerConfig:
     # observations (density threshold: a couple of steps is noise, not a
     # profile)
     replan_profile_min_obs: float = 8.0
+    # stage telemetry mode for the pipeline step: "auto" picks per-tick
+    # host callbacks on CPU backends and cheap step-bucketed timers
+    # elsewhere; "off" disables recording entirely
+    telemetry: str = "auto"
 
 
 class Trainer:
@@ -74,49 +86,135 @@ class Trainer:
             d_model=bundle.cfg.d_model,
             n_vision_tokens=bundle.cfg.n_vision_tokens)
         self.ckpt = ckpt.AsyncCheckpointer(cfg.ckpt_dir)
+        self.telemetry: Optional[StageTelemetry] = None
         self._ewma: Optional[float] = None
         self._slow = 0
         self.replans = 0
+        self.migrations = {"memory": 0, "checkpoint": 0}
         self._build()
         self._init_or_restore()
 
     # ------------------------------------------------------------ build ---
+    def _pipeline_active(self) -> bool:
+        """The trainer EXECUTES its plan (SPMD pipeline step, stacked
+        state) only when the plan describes this trainer's own workload —
+        same global batch and sequence length, microbatches dividing the
+        batch.  A plan searched for some other workload shape (e.g. a
+        capacity study) stays advisory, as before."""
+        plan = self.plan
+        return (plan is not None and plan.pp > 1
+                and plan.global_batch == self.cfg.global_batch
+                and plan.seq_len == self.cfg.seq_len
+                and self.cfg.global_batch % plan.tokens_per_tick == 0)
+
     def _build(self):
-        self.train_step = steps_mod.make_train_step(
-            self.bundle, self.rules, self.opt_cfg)
+        if self._pipeline_active():
+            plan = self.plan
+            m = plan.micro_batches
+            mode = self.cfg.telemetry
+            if mode == "auto":
+                mode = ("callback" if jax.default_backend() == "cpu"
+                        else "timer")
+            self.telemetry = (StageTelemetry(plan.pp, plan.vpp, m, mode=mode)
+                              if mode != "off" else None)
+            # only callback mode wires tick marks into the step — timer
+            # mode must keep host callbacks off the hot path entirely
+            loss_fn = pipeline.make_pp_loss_fn(
+                self.bundle.cfg, self.mesh, plan.pp, m,
+                layers_per_stage=list(plan.virtual_layers), vpp=plan.vpp,
+                telemetry=(self.telemetry if mode == "callback" else None))
+            self.train_step = steps_mod.make_train_step(
+                self.bundle, self.rules, self.opt_cfg, loss_fn=loss_fn)
+        else:
+            self.telemetry = None
+            self.train_step = steps_mod.make_train_step(
+                self.bundle, self.rules, self.opt_cfg)
         self._jit = jax.jit(self.train_step, donate_argnums=0)
 
+    # -------------------------------------------------- state & layouts ---
+    def _state_layout(self) -> Optional[Dict[str, Any]]:
+        """The pipeline layout the CURRENT plan stacks the state into
+        (None = canonical unstacked)."""
+        return (ckpt.plan_layout(self.plan) if self._pipeline_active()
+                else None)
+
+    def _init_state(self, key, layout=None):
+        state = steps_mod.init_train_state(self.bundle, key)
+        layout = layout if layout is not None else self._state_layout()
+        if layout is not None:
+            state = ckpt.migrate(state, None, layout)
+        return state
+
+    def _state_sds(self, layout=None):
+        return jax.eval_shape(
+            lambda k: self._init_state(k, layout), jax.random.PRNGKey(0))
+
     def _state_shardings(self, state_sds):
-        specs = steps_mod.state_specs(
-            self.bundle, self.rules, state_sds,
-            data_size=self.mesh.shape.get("data", 1))
+        if self._pipeline_active() and \
+                "pod" in getattr(self.mesh, "axis_names", ()):
+            data_size = self.mesh.shape.get("data", 1)
+            p_specs = pipeline.pp_param_specs(
+                self.rules.param_specs(state_sds["params"]))
+            opt_specs: Dict[str, Any] = {"count": P()}
+            for k in ("m", "v", "master"):
+                if k in state_sds["opt"]:
+                    opt_specs[k] = jax.tree.map(
+                        lambda sp, sh: self.rules.opt_state_spec(
+                            sp, sh.shape, data_size),
+                        p_specs, state_sds["opt"][k])
+            specs = {"params": p_specs, "opt": opt_specs, "step": P()}
+        else:
+            specs = steps_mod.state_specs(
+                self.bundle, self.rules, state_sds,
+                data_size=self.mesh.shape.get("data", 1))
         return jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs)
+
+    def _place(self, host_state, shardings):
+        return jax.tree.map(jax.device_put, host_state, shardings)
 
     def _init_or_restore(self):
         step = ckpt.latest_step(self.cfg.ckpt_dir)
         key = jax.random.PRNGKey(0)
-        state_sds = jax.eval_shape(
-            lambda k: steps_mod.init_train_state(self.bundle, k), key)
+        layout = self._state_layout()
+        state_sds = self._state_sds(layout)
         shardings = self._state_shardings(state_sds)
         if step is None:
             with compat.set_mesh(self.mesh):
                 self.state = jax.jit(
-                    lambda k: steps_mod.init_train_state(self.bundle, k),
+                    lambda k: self._init_state(k, layout),
                     out_shardings=shardings)(key)
             self.step = 0
-        else:
+            return
+        extra = ckpt.manifest_extra(self.cfg.ckpt_dir, step)
+        stored = extra.get("layout")
+        if ckpt._norm_layout(stored) == ckpt._norm_layout(layout):
             self.state, extra = ckpt.restore(
                 self.cfg.ckpt_dir, step, state_sds, shardings)
-            self.data.state = DataState.from_dict(extra["data"])
-            self.step = step
+        else:
+            # checkpoint written under a different plan: restore into the
+            # STORED layout's shapes, migrate, then lay out per the
+            # current plan (HETHUB elastic recovery)
+            state, extra = ckpt.restore(
+                self.cfg.ckpt_dir, step, self._state_sds(stored))
+            state = ckpt.migrate(state, stored, layout)
+            self.state = self._place(state, shardings)
+            self.migrations["checkpoint"] += 1
+        self.data.state = DataState.from_dict(extra["data"])
+        self.step = step
 
     # ------------------------------------------------------------- run ----
     def _device_batch(self, np_batch):
+        pp_m = self.plan.micro_batches if self._pipeline_active() else None
+
         def put(k, v):
-            spec = (self.rules.batch_spec() if v.ndim == 2
-                    else P(self.rules.dp_axes, None, None))
             if v.dtype == np.float32 and k in ("frames", "image_embeds"):
                 v = v.astype(self.bundle.cfg.adtype)
+            spec = (self.rules.batch_spec() if v.ndim == 2
+                    else P(self.rules.dp_axes, None, None))
+            if pp_m is not None:
+                # the pipeline consumes pre-microbatched (m, B_tick, ...)
+                v = v.reshape(pp_m, v.shape[0] // pp_m, *v.shape[1:])
+                spec = P(None, *tuple(spec))
             return jax.device_put(v, NamedSharding(self.mesh, spec))
 
         return {k: put(k, v) for k, v in np_batch.items()}
@@ -153,11 +251,15 @@ class Trainer:
                         on_straggler(self)
             if self.step % self.cfg.ckpt_every == 0:
                 self.ckpt.save_async(self.step, self.state,
-                                     extra={"data": self.data.state.to_dict()})
+                                     extra=self._ckpt_extra())
         self.ckpt.wait()
         if self.profile_store is not None and self.profile_store.path:
             self.profile_store.save()
         return {"losses": losses, "step": self.step}
+
+    def _ckpt_extra(self) -> Dict[str, Any]:
+        return {"data": self.data.state.to_dict(),
+                "layout": self._state_layout()}
 
     # ------------------------------------- online profile refinement ------
     def _refine_profile(self, dt: float):
@@ -182,8 +284,71 @@ class Trainer:
              "tp": self.cfg.tp},
             "per_seq_s", dt / (max(cfgm.num_layers, 1)
                                * self.cfg.global_batch))
+        if self.telemetry is not None:
+            self.telemetry.observe_step(dt)    # no-op in callback mode
+            self._fold_telemetry(dev)
 
-    def _profiled_cost_source(self, cluster: ClusterSpec):
+    def _fold_telemetry(self, dev: str):
+        """Fold fresh per-stage/per-tick observations as
+        ``observed_stage_tick`` / ``observed_bubble`` entries.  Single-host
+        runs fold every stage under this host's device kind (each host of
+        a real deployment folds its own stage under its own kind)."""
+        plan = self.plan
+        vl = list(plan.virtual_layers)
+        lmax = max(vl)
+        self.telemetry.fold_into(
+            self.profile_store, [dev] * plan.pp,
+            arch=self.bundle.cfg.name, seq_len=self.cfg.seq_len,
+            tp=self.cfg.tp, schedule=plan.schedule,
+            layers_per_vstage=vl,
+            padded_per_stage=[plan.vpp * lmax] * plan.pp,
+            micro_bs_per_stage=[plan.stage_micro_bs(i)
+                                for i in range(plan.pp)])
+
+    # ----------------------------------------------- schedule diagnostics --
+    def schedule_health(self) -> Optional[Dict[str, float]]:
+        """Observed vs predicted bubble for the executing plan — the
+        signal that separates "slow kernels" (stage ticks up, bubble flat:
+        refit costs) from "wrong schedule" (bubble above prediction:
+        re-score schedules).  None before any observation or without a
+        cluster+plan to predict against."""
+        if self.cluster is None or not self._pipeline_active():
+            return None
+        observed = self.telemetry.bubble() if self.telemetry else None
+        if observed is None and self.profile_store is not None:
+            from repro.profile.model import ProfiledCostModel
+            from repro.profile.runner import device_kind
+            observed = ProfiledCostModel(self.profile_store).observed_bubble(
+                device_kind(), self.bundle.cfg, self.plan.schedule,
+                self.plan.pp, self.plan.vpp, self.plan.micro_batches)
+        if observed is None:
+            return None
+        from repro.core.predictor import PerformancePredictor
+        predicted = PerformancePredictor(
+            self.cluster, self.bundle.cfg,
+            include_tp_comm=False).predict(self.plan).bubble_frac
+        return {"observed_bubble": observed, "predicted_bubble": predicted,
+                "ratio": observed / max(predicted, 1e-9)}
+
+    # --------------------------------------------- replan cost sourcing ---
+    def _degrade_scales(self, new_cluster: ClusterSpec) -> Dict[str, float]:
+        """Per-device-name time scales projecting observed (healthy) times
+        onto the new cluster: a kind whose effective TFLOPs dropped by f
+        serves its observations f-times slower (ClusterSpec.degrade)."""
+        if self.cluster is None:
+            return {}
+        old = {g.device.name: g.device.effective_tflops
+               for g in self.cluster.groups}
+        out = {}
+        for g in new_cluster.groups:
+            prev = old.get(g.device.name)
+            now = g.device.effective_tflops
+            if prev is not None and now > 0 and \
+                    abs(prev - now) > 1e-12 * prev:
+                out[g.device.name] = prev / now
+        return out
+
+    def profiled_cost_source(self, cluster: ClusterSpec):
         """The online profile as a planner cost source — once it is dense
         enough to trust (ROADMAP: profile-aware replan).
 
@@ -191,7 +356,10 @@ class Trainer:
         observations.  Every cluster device maps to this host's device
         kind: the observing host stands in for the whole cluster, the
         paper's profile-a-sample-predict-the-cluster methodology (a real
-        multi-island deployment folds per-island kinds instead)."""
+        multi-island deployment folds per-island kinds instead).  Device
+        kinds the new cluster reports as degraded relative to the one the
+        observations were taken on get their served times scaled up by
+        the degradation factor."""
         store = self.profile_store
         if store is None:
             return None
@@ -199,7 +367,8 @@ class Trainer:
         # entries for the trained architecture (a stale profile for some
         # other model must not open the gate)
         obs = [e for e in (store.entries(op="observed_layer_step")
-                           + store.entries(op="layer_step"))
+                           + store.entries(op="layer_step")
+                           + store.entries(op="observed_stage_tick"))
                if e.shape.get("arch") == self.bundle.cfg.name]
         if sum(e.value.get("n", 1.0) for e in obs) < \
                 self.cfg.replan_profile_min_obs:
@@ -208,33 +377,61 @@ class Trainer:
         from repro.profile.runner import device_kind
         dev = device_kind()
         return ProfiledCostModel(
-            store, device_map={g.device.name: dev for g in cluster.groups})
+            store, device_map={g.device.name: dev for g in cluster.groups},
+            time_scale=self._degrade_scales(cluster))
 
     # ------------------------------------------- elastic replan (HETHUB) --
     def replan(self, new_cluster: ClusterSpec, *, global_batch: int,
-               seq_len: int, **search_kw):
-        """Node failure / elastic scale event: search a new plan on the
-        surviving cluster, checkpoint-now, rebuild, reshard, resume.
+               seq_len: int, migrate: str = "memory", **search_kw):
+        """Node failure / degradation / elastic scale event: search a new
+        plan on the surviving cluster, checkpoint-now, and migrate the
+        live state onto the new plan without restarting.
 
-        When the trainer has been folding observed step times into its
-        ``profile_store``, the search runs against them (measured costs)
-        instead of the analytic model — unless the caller passes an
-        explicit ``cost_source``."""
+        When the trainer has been folding observed step times and stage
+        telemetry into its ``profile_store``, the search runs against them
+        (measured costs, degradation-scaled) instead of the analytic model
+        — unless the caller passes an explicit ``cost_source`` — and the
+        incumbent plan is scored as the search baseline, so the winner is
+        never predicted worse than staying put.
+
+        ``migrate``: "memory" reshards optimizer+param state in memory
+        (checkpoint round-trip only as a fallback); "checkpoint" forces
+        the round-trip through the just-written checkpoint."""
+        if migrate not in ("memory", "checkpoint"):
+            raise ValueError(f"unknown migrate mode {migrate!r}")
         if "cost_source" not in search_kw:
-            src = self._profiled_cost_source(new_cluster)
+            src = self.profiled_cost_source(new_cluster)
             if src is not None:
                 search_kw["cost_source"] = src
+        if self.plan is not None:
+            search_kw.setdefault("baseline_plan", self.plan)
         result = planner_mod.search(new_cluster, self.bundle.cfg,
                                     global_batch=global_batch,
                                     seq_len=seq_len, **search_kw)
         self.ckpt.wait()
+        old_layout = self._state_layout()
+        # durable pre-migration checkpoint in the OLD layout (crash safety
+        # + the round-trip fallback's source)
         ckpt.save(self.cfg.ckpt_dir, self.step, self.state,
-                  extra={"data": self.data.state.to_dict()})
+                  extra=self._ckpt_extra())
         self.cluster = new_cluster
         self.plan = result.plan
         self.replans += 1
         self._build()
-        self._init_or_restore()   # restores the checkpoint just written
+        migrated = False
+        if migrate == "memory":
+            try:
+                host = jax.device_get(self.state)
+                host = ckpt.migrate(host, old_layout, self._state_layout())
+                shardings = self._state_shardings(
+                    jax.eval_shape(lambda: host))
+                self.state = self._place(host, shardings)
+                self.migrations["memory"] += 1
+                migrated = True
+            except Exception:   # noqa: BLE001 — any failure falls back to
+                pass            # the durable checkpoint round-trip
+        if not migrated:
+            self._init_or_restore()   # restores + migrates the checkpoint
         # the rebuilt step recompiles on first use: restart the EWMA so the
         # compile step is neither folded into the profile nor flagged slow
         self._ewma = None

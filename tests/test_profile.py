@@ -1,6 +1,7 @@
 """Profiling & calibration subsystem: store round-trip, interpolation,
 analytic-vs-profiled predictor parity, planner on a measured profile, and
 the online refinement hook."""
+import json
 import tempfile
 from pathlib import Path
 
@@ -317,6 +318,122 @@ def test_replan_uses_profiled_cost_source(tmp_path, monkeypatch):
     # caller-provided cost_source is never overridden
     t.replan(cl, global_batch=96, seq_len=32, cost_source=None)
     assert captured["cost_source"] is None
+
+
+# -------------------------------------- telemetry store kinds (PR 4) -------
+def _tick_shape(stage=0, sched="1f1b", layers=3, padded=3, mbs=2):
+    return {"arch": "m", "seq_len": 32, "tp": 1, "schedule": sched,
+            "stage": stage, "pp": 2, "vpp": 1, "layers": layers,
+            "padded_layers": padded, "micro_bs": mbs}
+
+
+def test_observed_stage_tick_fold_running_mean():
+    """Weighted running-mean math of the telemetry kinds, same contract as
+    every other folded entry: value converges to the weighted mean, n
+    accumulates the weights."""
+    st = ProfileStore()
+    sh = _tick_shape()
+    st.fold("cpu", "observed_stage_tick", sh, "tick_s", 1.0)
+    st.fold("cpu", "observed_stage_tick", sh, "tick_s", 3.0)
+    st.fold("cpu", "observed_stage_tick", sh, "tick_s", 8.0, weight=2.0)
+    e = st.get("cpu", "observed_stage_tick", sh)
+    assert e.value["n"] == 4.0
+    assert e.value["tick_s"] == pytest.approx((1.0 + 3.0 + 2 * 8.0) / 4.0)
+    bs = {"arch": "m", "schedule": "1f1b", "pp": 2, "vpp": 1, "m": 4}
+    st.fold("cpu", "observed_bubble", bs, "bubble_frac", 0.2)
+    st.fold("cpu", "observed_bubble", bs, "bubble_frac", 0.4)
+    assert st.get("cpu", "observed_bubble", bs).value["bubble_frac"] == \
+        pytest.approx(0.3)
+
+
+def test_observed_kinds_provenance_versioning(tmp_path):
+    """Telemetry entries round-trip through the versioned store with their
+    provenance (schema version + telemetry mode marker) intact, and a
+    newer-schema file still refuses to load."""
+    p = tmp_path / "tele.json"
+    st = ProfileStore(p)
+    e = st.fold("cpu", "observed_stage_tick", _tick_shape(), "tick_s", 1e-3)
+    e.meta.update({"telemetry": "callback"})
+    st.fold("cpu", "observed_bubble",
+            {"arch": "m", "schedule": "1f1b", "pp": 2, "vpp": 1, "m": 4},
+            "bubble_frac", 0.25)
+    st.save()
+    st2 = ProfileStore.load(p)
+    e2 = st2.get("cpu", "observed_stage_tick", _tick_shape())
+    assert e2.meta["schema"] == 1 and e2.meta["telemetry"] == "callback"
+    assert e2.value == pytest.approx(e.value)
+    doc = json.loads(p.read_text())
+    doc["version"] = 99
+    p.write_text(json.dumps(doc))
+    with pytest.raises(ValueError, match="newer schema"):
+        ProfileStore.load(p)
+
+
+def test_observed_bubble_interpolation_and_pair_fallback():
+    """observed_bubble interpolates over the numeric (pp, vpp, m) axes but
+    returns None — analytic fallback — for a (device_kind, schedule) pair
+    that was never observed."""
+    from repro.models import registry
+    cfg = registry.get_config("llama3-8b")
+    st = ProfileStore()
+    for m in (4, 8):
+        st.fold("cpu", "observed_bubble",
+                {"arch": cfg.name, "schedule": "1f1b", "pp": 2, "vpp": 1,
+                 "m": m}, "bubble_frac", 0.4 if m == 4 else 0.2)
+    src = ProfiledCostModel(st)
+    assert src.observed_bubble("cpu", cfg, "1f1b", 2, 1, 4) == \
+        pytest.approx(0.4)
+    assert src.observed_bubble("cpu", cfg, "1f1b", 2, 1, 6) == \
+        pytest.approx(0.3)          # interpolated between m=4 and m=8
+    assert src.observed_bubble("cpu", cfg, "1f1b", 2, 1, 16) == \
+        pytest.approx(0.2)          # clamped, not extrapolated
+    # missing (device_kind, schedule) pairs -> None, caller falls back
+    assert src.observed_bubble("cpu", cfg, "gpipe", 2, 1, 4) is None
+    assert src.observed_bubble("tpu", cfg, "1f1b", 2, 1, 4) is None
+
+
+def test_stage_tick_serves_layer_time_with_scale():
+    """The serving hierarchy: observed_stage_tick aggregation outranks the
+    whole-step observed_layer_step but yields to a measured layer_step
+    sweep; time_scale multiplies profile-served times per queried device
+    NAME (degrade projection) and never touches the analytic fallback."""
+    from repro.models import registry
+    cfg = registry.get_config("llama3-8b")
+    st = ProfileStore()
+    # two telemetry entries, padded depth 4, mbs 2: per-layer per-seq
+    # forward = tick_s / (4 * 2)
+    for stage, tick in ((0, 8e-3), (1, 8e-3)):
+        st.fold("cpu", "observed_stage_tick",
+                {"arch": cfg.name, "seq_len": 32, "tp": 1, "schedule": "1f1b",
+                 "stage": stage, "pp": 2, "vpp": 1, "layers": 3,
+                 "padded_layers": 4, "micro_bs": 2}, "tick_s", tick)
+    # stale whole-step estimate that must be outranked
+    st.fold("cpu", "observed_layer_step",
+            {"arch": cfg.name, "seq_len": 32, "tp": 1}, "per_seq_s", 99.0)
+    src = ProfiledCostModel(st, device_map={"amd": "cpu", "gpu-a": "cpu"})
+    per_seq = 8e-3 / (4 * 2)
+    fwd, bwd = src.layer_time("amd", cfg, 32, 2, 1)
+    assert fwd == pytest.approx(per_seq * 2)
+    assert bwd == pytest.approx(2 * per_seq * 2)
+    # degrade projection: gpu-a observed on the same host but now 4x slower
+    src4 = ProfiledCostModel(st, device_map={"amd": "cpu", "gpu-a": "cpu"},
+                             time_scale={"gpu-a": 4.0})
+    f_a, _ = src4.layer_time("amd", cfg, 32, 2, 1)
+    f_g, b_g = src4.layer_time("gpu-a", cfg, 32, 2, 1)
+    assert f_g == pytest.approx(4 * f_a) and b_g == pytest.approx(2 * f_g)
+    # a measured layer_step sweep outranks telemetry (and is scaled too)
+    for mbs in (1, 2, 4):
+        st.put("cpu", "layer_step",
+               {"arch": cfg.name, "seq_len": 32, "micro_bs": mbs, "tp": 1},
+               {"fwd_s": 1e-3 * mbs, "bwd_s": 2e-3 * mbs})
+    f_m, _ = src4.layer_time("gpu-a", cfg, 32, 2, 1)
+    assert f_m == pytest.approx(4.0 * 2e-3)
+    # a device kind with no profile at all falls through to the analytic
+    # fallback, which time_scale never touches (the degraded spec's own
+    # effective TFLOPs already model it)
+    src5 = ProfiledCostModel(st, time_scale={"tpu": 4.0})
+    assert src5.layer_time("tpu", cfg, 32, 2, 1) == \
+        ProfiledCostModel(ProfileStore()).layer_time("tpu", cfg, 32, 2, 1)
 
 
 # ----------------------------------------------------------------- runner --

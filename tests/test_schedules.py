@@ -164,49 +164,101 @@ def test_unknown_schedule_and_bad_vpp():
             sim(t, 4, "interleaved-1f1b", vpp=3)
 
 
-# --------------------------------------------------- peak memory vs trace --
-def _trace_peaks(timings, m, vpp):
-    trace = []
-    simulator.simulate(timings, m, "interleaved-1f1b", vpp=vpp, trace=trace)
-    pp = len(timings) // vpp
+# ----------------------------------------- chunk-level peak mem vs trace --
+def _hand_peaks(trace, pp, vl):
+    """Independent re-derivation of the layer-weighted in-flight peak from
+    a raw SimEvent list (what trace_peak_layers must equal)."""
     peaks = []
     for i in range(pp):
         ev = sorted((e for e in trace if e.stage == i),
                     key=lambda e: (e.start, e.dir == "F"))
         cur = peak = 0
         for e in ev:
-            cur += 1 if e.dir == "F" else -1
+            cur += vl[e.vs] if e.dir == "F" else -vl[e.vs]
             peak = max(peak, cur)
         peaks.append(peak)
     return peaks
 
 
-def test_interleaved_peak_matches_trace_exactly():
-    """On saturating shapes (uniform timings) the brute-force in-flight
-    count from the oracle's event trace equals
-    ``peak_activation_microbatches`` at every stage — including ragged
-    m < pp groups and the vpp*m-bound regime."""
-    for pp, vpp, m in [(4, 2, 16), (3, 3, 12), (2, 4, 9), (6, 2, 5),
-                       (5, 3, 4), (2, 2, 1), (1, 4, 6), (4, 2, 2)]:
-        t = [StageTiming(1.0, 1.0, 0.0)] * (pp * vpp)
-        peaks = _trace_peaks(t, m, vpp)
-        for i, peak in enumerate(peaks):
-            assert peak == simulator.peak_activation_microbatches(
-                i, pp, m, "interleaved-1f1b", vpp=vpp), (pp, vpp, m, i)
+def test_chunk_peak_layers_matches_both_traces_seeded():
+    """Chunk-LEVEL peak memory accounting (PR 4, replacing the PR-3
+    mean-chunk assertions): for ragged chunk_layers splits and random
+    timings, ``trace_peak_layers`` over the fastsim trace equals the
+    by-hand accounting of the oracle's SimEvent trace — the two DES
+    implementations stay memory-equal op for op, not only time-equal."""
+    rng = random.Random(4)
+    for _ in range(150):
+        pp = rng.randint(2, 6)
+        vpp = rng.randint(1, 4)
+        m = rng.randint(1, 10)
+        V = pp * vpp
+        vl = [rng.randint(0, 5) for _ in range(V)]
+        t = _rand_virtual_timings(rng, V)
+        tr_o, tr_f = [], []
+        simulator.simulate(t, m, "interleaved-1f1b", vpp=vpp, trace=tr_o)
+        fastsim.simulate(t, m, "interleaved-1f1b", vpp=vpp, trace=tr_f)
+        want = _hand_peaks(tr_o, pp, vl)
+        assert simulator.trace_peak_layers(tr_f, pp, vl) == want
+        assert simulator.trace_peak_layers(tr_o, pp, vl) == want
 
 
-@given(st.integers(1, 5), st.integers(1, 4), st.integers(1, 10),
+@given(st.integers(2, 6), st.integers(1, 4), st.integers(1, 10),
+       st.lists(st.integers(0, 5), min_size=1, max_size=24),
        st.lists(st.tuples(st.floats(0.05, 3.0), st.floats(0.05, 5.0),
-                          st.floats(0.0, 1.0)), min_size=1, max_size=20))
+                          st.floats(0.0, 1.0)), min_size=1, max_size=24))
 @settings(max_examples=80, deadline=None)
-def test_interleaved_peak_never_exceeds_envelope(pp, vpp, m, raw):
-    """For arbitrary timings the trace peak is bounded by the enforced
-    envelope (the memory model sizes to the envelope)."""
-    n = pp * vpp
-    t = [StageTiming(f, b, s) for f, b, s in (raw * n)[:n]]
-    for i, peak in enumerate(_trace_peaks(t, m, vpp)):
+def test_chunk_peak_layers_property(pp, vpp, m, weights, raw):
+    """Property form over pp 2..6, vpp 1..4 with ragged chunk weights:
+    fastsim-trace == oracle-trace chunk-level accounting, and with unit
+    weights the peak is bounded by the enforced in-flight envelope
+    (``peak_activation_microbatches``) — the envelope stays a valid upper
+    bound even though ``peak_memory`` now uses the exact trace."""
+    V = pp * vpp
+    vl = (weights * V)[:V]
+    t = [StageTiming(f, b, s) for f, b, s in (raw * V)[:V]]
+    tr_o, tr_f = [], []
+    simulator.simulate(t, m, "interleaved-1f1b", vpp=vpp, trace=tr_o)
+    fastsim.simulate(t, m, "interleaved-1f1b", vpp=vpp, trace=tr_f)
+    assert simulator.trace_peak_layers(tr_f, pp, vl) == \
+        _hand_peaks(tr_o, pp, vl)
+    for i, peak in enumerate(simulator.trace_peak_layers(
+            tr_o, pp, [1] * V)):
         assert peak <= simulator.peak_activation_microbatches(
             i, pp, m, "interleaved-1f1b", vpp=vpp)
+
+
+def test_predictor_peak_memory_trace_exact_ragged():
+    """``predictor.peak_memory`` on interleaved plans is trace-exact: for
+    a ragged chunk split it reproduces the by-hand SimEvent accounting
+    (and differs from the old mean-chunk envelope where the in-flight mix
+    is skewed)."""
+    cl = C.paper_cluster_of_size(12)
+    pred = PerformancePredictor(cl, LLAMA2_70B, include_tp_comm=False)
+    groups = planner._stage_groups(cl, 4)
+    dpg = [cl.groups[g].n_accel // (8 * groups.count(g))
+           for g in range(len(cl.groups))]
+    stages = tuple(
+        StagePlacement(group=groups[i], n_layers=n, dp=dpg[groups[i]],
+                       tp=8, is_last=(i == 3))
+        for i, n in enumerate([23, 19, 19, 19]))
+    plan = ParallelPlan(stages=stages, micro_bs=1, global_batch=96,
+                        seq_len=4096, schedule="interleaved-1f1b", vpp=3,
+                        chunk_layers=(9, 7, 7, 7, 9, 7, 7, 7, 5, 5, 5, 5))
+    trace = []
+    simulator.simulate(pred.virtual_timings(plan), plan.micro_batches,
+                       "interleaved-1f1b", vpp=3, trace=trace)
+    peaks = simulator.trace_peak_layers(trace, 4, plan.virtual_layers)
+    mems = pred.peak_memory(plan)
+    lc = pred.src.layer_cost(LLAMA2_70B, plan.seq_len)
+    for i, st_ in enumerate(plan.stages):
+        params = lc.param_bytes * st_.n_layers / st_.tp
+        opt = params * (6.0 + 2.0 / st_.dp)
+        acts = (lc.act_bytes_per_token * plan.stage_micro_bs(i)
+                * plan.seq_len / st_.tp) * peaks[i]
+        assert mems[i] == pytest.approx((params + opt + acts) / 1e9,
+                                        rel=1e-12), i
+    # prediction reuses the scoring run's trace — same result
+    assert pred.predict(plan).peak_mem_gb == mems
 
 
 # ------------------------------------------- HBM caps: reject-then-fit ----
