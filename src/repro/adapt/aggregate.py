@@ -1,0 +1,139 @@
+"""Multi-host telemetry aggregation: one profile view per cluster, not per
+process.
+
+``StageTelemetry`` attributes ticks for a single process — on a real
+multi-pod deployment each process folds its OWN pod's stages, under its
+own island's device kind, into its own local ``ProfileStore``.  Before the
+adaptation policy evaluates (and before a replan searches), those
+per-process folds must be gathered into one per-island profile, or the
+policy would be reasoning about a 1/N view of the cluster.
+
+The aggregation is a pure fold-merge (``ProfileStore.merge``): running
+means with observation counts compose exactly, so gathering full stores
+and merging from scratch each time is idempotent — no delta tracking, no
+double counting.  Three aggregators, one protocol:
+
+  * ``LocalAggregator`` — single-process runs: the local store IS the
+    cluster view (identity; the default on one process);
+  * ``InMemoryFanIn`` — CPU test meshes and unit tests: per-"process"
+    stores registered explicitly, gathered by direct merge (what a real
+    deployment does over the network, minus the network);
+  * ``ProcessAllGatherAggregator`` — real multi-process jax runs:
+    observed-telemetry entries are JSON-serialized and exchanged with
+    ``jax.experimental.multihost_utils.process_allgather`` (length-padded
+    uint8 payloads, since allgather wants equal shapes), then merged.
+
+``default_aggregator()`` picks by ``jax.process_count()`` — the launch
+layer wires it through, so a multi-pod run needs no extra flags
+(ROADMAP: multi-pod telemetry aggregation).
+"""
+from __future__ import annotations
+
+import json
+from typing import List, Optional, Sequence
+
+from repro.profile.store import Entry, ProfileStore
+
+# the entry kinds that are per-process observations and therefore worth
+# shipping between processes (static calibration kinds — layer_cost,
+# link, ... — are host-local measurements every process already has or
+# can serve from its own fallback)
+OBSERVED_OPS = ("observed_stage_tick", "observed_bubble",
+                "observed_step", "observed_layer_step")
+
+
+def merge_stores(stores: Sequence[ProfileStore],
+                 ops: Optional[Sequence[str]] = None) -> ProfileStore:
+    """Fold-merge ``stores`` into one fresh store (n-weighted running
+    means compose exactly; see ``ProfileStore.merge``)."""
+    merged = ProfileStore()
+    for s in stores:
+        merged.merge(s, ops=list(ops) if ops is not None else None)
+    return merged
+
+
+class LocalAggregator:
+    """Single-process identity: the local store already sees everything."""
+
+    def gather(self, local: ProfileStore) -> ProfileStore:
+        return local
+
+
+class InMemoryFanIn:
+    """In-memory fan-in for CPU test meshes: every simulated process
+    registers its local store; ``gather`` merges them all (the local store
+    included) into one fresh cluster view."""
+
+    def __init__(self, stores: Optional[Sequence[ProfileStore]] = None):
+        self.stores: List[ProfileStore] = list(stores or [])
+
+    def register(self, store: ProfileStore) -> None:
+        self.stores.append(store)
+
+    def gather(self, local: ProfileStore) -> ProfileStore:
+        peers = [s for s in self.stores if s is not local]
+        return merge_stores([local] + peers)
+
+
+class ProcessAllGatherAggregator:
+    """Real multi-process meshes: allgather each process's observed
+    telemetry entries and merge them into a fresh cluster view.
+
+    The local store's full contents (calibration entries included) seed
+    the view; only ``OBSERVED_OPS`` entries cross the wire.  Payloads are
+    JSON -> uint8 arrays padded to the gathered max length (allgather
+    needs equal shapes across processes)."""
+
+    def __init__(self, ops: Sequence[str] = OBSERVED_OPS):
+        self.ops = tuple(ops)
+
+    # split out for the unit tests (exercised without a multi-host run)
+    def _encode(self, local: ProfileStore) -> bytes:
+        entries = [e.to_dict() for op in self.ops
+                   for e in local.entries(op=op)]
+        return json.dumps(entries).encode("utf-8")
+
+    def _merge_payloads(self, local: ProfileStore,
+                        payloads: Sequence[bytes]) -> ProfileStore:
+        merged = ProfileStore()
+        merged.merge(local)
+        for raw in payloads:
+            if not raw:
+                continue
+            remote = ProfileStore()
+            for d in json.loads(raw.decode("utf-8")):
+                e = Entry.from_dict(d)
+                remote.put(e.device_kind, e.op, e.shape, e.value,
+                           meta=e.meta)
+            merged.merge(remote, ops=list(self.ops))
+        return merged
+
+    def gather(self, local: ProfileStore) -> ProfileStore:
+        import jax
+        if jax.process_count() == 1:
+            return local
+        import numpy as np
+        from jax.experimental import multihost_utils
+        payload = np.frombuffer(self._encode(local), dtype=np.uint8)
+        lengths = multihost_utils.process_allgather(
+            np.asarray([payload.size], dtype=np.int64))
+        max_len = int(np.max(lengths))
+        padded = np.zeros(max_len, dtype=np.uint8)
+        padded[:payload.size] = payload
+        gathered = multihost_utils.process_allgather(padded, tiled=False)
+        me = jax.process_index()
+        payloads = [bytes(gathered[i, :int(lengths[i])])
+                    for i in range(gathered.shape[0]) if i != me]
+        return self._merge_payloads(local, payloads)
+
+
+def default_aggregator():
+    """The right aggregator for this runtime: allgather on a real
+    multi-process mesh, identity otherwise.  The launch layer calls this —
+    multi-pod telemetry aggregation needs no extra flags."""
+    try:
+        import jax
+        multi = jax.process_count() > 1
+    except Exception:   # noqa: BLE001 — no jax, no processes
+        multi = False
+    return ProcessAllGatherAggregator() if multi else LocalAggregator()

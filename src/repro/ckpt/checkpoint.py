@@ -22,6 +22,17 @@ Fault-tolerance contract:
     thread bookkeeping AND the keep-window GC run under one lock — GC
     scanning the directory concurrently with a newer save's rename was a
     race (it could act on a torn listing).
+
+Invariant — ``migrate`` is bit-exact on real layers: unstacking a state to
+canonical layer order and restacking it under any pipeline layout (and
+back) is the identity on every real layer of params and every optimizer
+moment tree; only padding slots are re-zeroed.  Chained migrations
+(canonical -> A -> B -> canonical) compose to the identity too.  This is
+what lets a live replan move optimizer+param state onto a new plan with
+zero numeric drift — the adaptation controller's migrations are free of
+training-trajectory side effects.  Locked by tests/test_replan.py
+(seeded + hypothesis round-trips, e2e migrated-vs-restarted equality) and
+tests/test_adapt.py (autonomous vs manual path, bit for bit).
 """
 from __future__ import annotations
 

@@ -29,10 +29,16 @@ avoids the oracle's O(m·pp²) rescan loop:
                     warmup envelope — O(pp·vpp·m·(vpp + log pp)) vs the
                     oracle's O(m·vpp²·pp²) rescan.
 
-Exactness: identical op orders and start times as the oracle for strictly
-positive fwd/bwd durations (ties across stages are then provably
-independent); ``tests/test_fastsim.py`` asserts agreement on randomized
-timings across schedules, m, and eager slack.
+Invariant — fastsim == oracle, exactly: every schedule here produces
+identical op orders and start times as the event-driven oracle
+(:mod:`repro.core.simulator`) for strictly positive fwd/bwd durations
+(ties across stages are then provably independent).  This is an equality,
+not an approximation: the planner's scores, the predictor's trace-exact
+peak-memory accounting, and the adaptation controller's expected-gain
+gate all rest on it.  ``tests/test_fastsim.py`` and
+``tests/test_schedules.py`` assert agreement on randomized timings across
+schedules, m, vpp, and eager slack; ``lower_bound`` is asserted to never
+exceed the simulated time (pruning soundness).
 """
 from __future__ import annotations
 

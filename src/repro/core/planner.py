@@ -35,7 +35,22 @@ Engines:
     ``benchmarks/bench_planner.py`` and equivalence tests.
 
 The planner doubles as the fault-tolerance brain: on node loss, re-run
-``search`` on the surviving ClusterSpec and reshard (train/trainer.py).
+``search`` on the surviving ClusterSpec and reshard (train/trainer.py) —
+autonomously, when the adaptation controller (repro.adapt) is driving.
+
+Invariants (locked by tests/test_fastsim.py, tests/test_schedules.py,
+tests/test_adapt.py):
+  * the fast engine's winner is never predicted worse than the reference
+    engine's on the same inputs, and lower-bound pruning never discards a
+    candidate that could beat the incumbent best (the bound is a true
+    lower bound on simulated iter_time);
+  * with ``baseline_plan`` given, the incumbent is scored under the SAME
+    cost source as every candidate, the winner's iter_time is <= the
+    incumbent's whenever the incumbent is feasible, and
+    ``PlannerResult.baseline_time`` / ``.expected_gain`` expose the
+    margin — the quantity a replan policy gates live migrations on;
+  * every leaf is scored by simulation (fastsim == event-driven oracle,
+    op-for-op), never by a closed-form approximation.
 """
 from __future__ import annotations
 
@@ -59,6 +74,22 @@ class PlannerResult:
     evaluated: int
     log: Tuple[Tuple[str, float], ...]  # (plan description, iter_time)
     pruned: int = 0   # candidates skipped by the lower-bound cutoff
+    # incumbent's (``baseline_plan``) predicted iter_time under the SAME
+    # cost source as the winner, when one was scored — the expected-gain
+    # accounting a replan policy gates migrations on (migrations aren't
+    # free, so the winner must beat the incumbent by a margin)
+    baseline_time: Optional[float] = None
+
+    @property
+    def expected_gain(self) -> Optional[float]:
+        """Predicted fractional iter-time improvement of the winning plan
+        over the scored incumbent: ``1 - winner/incumbent``.  None when no
+        incumbent was scored (fresh search, or the baseline no longer maps
+        onto the cluster); <= 0 means the search predicts staying put is
+        at least as fast (the winner IS the incumbent, or ties it)."""
+        if self.baseline_time is None or self.baseline_time <= 0.0:
+            return None
+        return 1.0 - self.prediction.iter_time / self.baseline_time
 
 
 def _stage_group_orders(cluster: ClusterSpec, pp: int,
@@ -321,6 +352,7 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
     log: List[Tuple[str, float]] = []
     evaluated = 0
     pruned = 0
+    baseline_time: Optional[float] = None
     if baseline_plan is not None:
         try:
             p = pred.predict(baseline_plan)
@@ -328,6 +360,7 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
             p = None   # incumbent doesn't map onto this cluster anymore
         if p is not None:
             evaluated += 1
+            baseline_time = p.iter_time
             log.append((f"baseline {baseline_plan.describe()}", p.iter_time))
             if not (require_fit and not p.fits):
                 best = (p, baseline_plan)   # also seeds the pruning cutoff
@@ -356,7 +389,7 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
         raise RuntimeError("planner found no feasible plan (memory/divisibility)")
     return PlannerResult(plan=best[1], prediction=best[0],
                          evaluated=evaluated, log=tuple(log),
-                         pruned=pruned)
+                         pruned=pruned, baseline_time=baseline_time)
 
 
 def _interleaved_candidate(pred: PerformancePredictor, cluster: ClusterSpec,

@@ -10,8 +10,17 @@ checkpointing, straggler telemetry and elastic-replan hooks.
 ``--pp N`` runs the HETHUB pipeline end-to-end: the automatic parallel
 planner searches a plan over a paper-preset heterogeneous cluster, the
 trainer executes it through the SPMD pipeline step with online stage
-telemetry, and ``--degrade KIND:FACTOR`` injects a straggler after the
-warmup steps to drive a live replan + state migration mid-run.
+telemetry, and ``--degrade KIND:FACTOR[@STEP]`` injects a straggler
+(default: after half the steps) to drive a live replan + state migration
+mid-run.
+
+``--adapt`` hands that decision to the autonomous adaptation controller
+(repro.adapt): the injected degradation only distorts the telemetry, and
+the policy detects it, replans, gain-gates, and live-migrates BY ITSELF —
+no replan call in this driver.  Every decision prints as a structured
+AdaptEvent line (docs/adaptation.md is the runbook).  Multi-process runs
+aggregate per-pod telemetry automatically (repro.adapt.default_aggregator)
+— no extra flags.
 """
 from __future__ import annotations
 
@@ -32,6 +41,9 @@ def main():
                     choices=list(registry.ARCH_IDS) + ["llama-100m"])
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-sized)")
+    ap.add_argument("--layers", type=int, default=0,
+                    help="override the arch's layer count (0 = default; "
+                         "a pipeline needs enough layers to re-balance)")
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -45,8 +57,27 @@ def main():
     ap.add_argument("--telemetry", default="auto",
                     choices=["auto", "callback", "timer", "off"])
     ap.add_argument("--degrade", default="",
-                    help="KIND:FACTOR straggler injection after half the "
-                         "steps -> live replan + migration (needs --pp)")
+                    help="KIND:FACTOR[@STEP] straggler injection (default "
+                         "STEP: half the steps) -> live replan + migration "
+                         "(needs --pp); with --adapt the injection only "
+                         "distorts telemetry and the controller reacts")
+    ap.add_argument("--adapt", action="store_true",
+                    help="autonomous adaptation: the repro.adapt policy "
+                         "watches telemetry and replans/migrates itself")
+    ap.add_argument("--adapt-min-gain", type=float, default=0.05,
+                    help="ε gate: min predicted fractional iter-time gain "
+                         "before a migration is adopted")
+    ap.add_argument("--adapt-enter", type=float, default=2.0,
+                    help="straggler hysteresis enter threshold (ratio of "
+                         "a stage's tick time vs its healthy baseline)")
+    ap.add_argument("--adapt-exit", type=float, default=0.0,
+                    help="straggler hysteresis exit threshold; 0 derives "
+                         "it from --adapt-enter (keeps the default band "
+                         "shape, so any enter value is valid)")
+    ap.add_argument("--adapt-patience", type=float, default=2.0,
+                    help="armed observations required before triggering")
+    ap.add_argument("--adapt-cooldown", type=int, default=8,
+                    help="observed steps of silence after any trigger")
     args = ap.parse_args()
 
     if args.arch == "llama-100m":
@@ -56,13 +87,24 @@ def main():
             CONFIG, name="llama-100m", num_layers=12, d_model=768,
             n_heads=12, n_kv_heads=4, d_ff=2048, vocab_size=32000,
             param_dtype="float32", dtype="float32")
+        if args.layers:
+            cfg = dataclasses.replace(cfg, num_layers=args.layers)
         bundle = registry.bundle_for(cfg)
     else:
-        bundle = registry.get_bundle(args.arch, smoke=args.smoke)
+        overrides = {"num_layers": args.layers} if args.layers else {}
+        bundle = registry.get_bundle(args.arch, smoke=args.smoke,
+                                     **overrides)
 
     n_dev = len(jax.devices())
     mesh = jax.make_mesh((n_dev, 1), ("data", "model"))
     cluster = plan = store = None
+    # ONE search space for the initial plan, the manual degrade replan,
+    # and the controller's autonomous replans — diverging constraints
+    # between them would make replans explore a different space than the
+    # plan they replace
+    search_kw = dict(pp_options=[args.pp] if args.pp else None,
+                     tp_options=[1], micro_bs_options=[1, 2],
+                     require_fit=False, include_tp_comm=False)
     if args.pp:
         from repro.core import cluster as cluster_mod, planner
         from repro.profile.store import ProfileStore
@@ -71,51 +113,83 @@ def main():
             cluster_mod.NodeGroup(cluster_mod.GPU_A, 1, accel_per_node=1)))
         plan = planner.search(
             cluster, bundle.cfg, global_batch=args.global_batch,
-            seq_len=args.seq, pp_options=[args.pp], tp_options=[1],
-            micro_bs_options=[1, 2], require_fit=False,
-            include_tp_comm=False).plan
+            seq_len=args.seq, **search_kw).plan
         print(f"[train] plan: {plan.describe()}")
         # the telemetry folds land here, so the degrade replan below
         # searches against observed (scaled) costs once dense enough
         store = ProfileStore()
+    degrade_kind, degrade_factor, degrade_step = None, 1.0, None
+    if args.degrade:
+        spec, _, at = args.degrade.partition("@")
+        kind, _, factor = spec.partition(":")
+        degrade_kind, degrade_factor = kind, float(factor)
+        degrade_step = int(at) if at else args.steps // 2
+    policy = aggregator = None
+    adapt_kw = {}
+    if args.adapt:
+        from repro.adapt import AdaptConfig, ReplanPolicy, default_aggregator
+        exit_ = args.adapt_exit or args.adapt_enter * (
+            AdaptConfig.straggler_exit / AdaptConfig.straggler_enter)
+        policy = ReplanPolicy(AdaptConfig(
+            min_gain=args.adapt_min_gain,
+            straggler_enter=args.adapt_enter, straggler_exit=exit_,
+            patience=args.adapt_patience, cooldown=args.adapt_cooldown))
+        # multi-pod telemetry aggregation needs no extra flags: identity on
+        # one process, process_allgather fan-in on a real multi-host mesh
+        aggregator = default_aggregator()
+        adapt_kw = dict(search_kw)
     t = Trainer(bundle, mesh,
                 TrainerConfig(global_batch=args.global_batch,
                               seq_len=args.seq, ckpt_dir=args.ckpt_dir,
                               ckpt_every=args.ckpt_every,
                               telemetry=args.telemetry),
                 cluster=cluster, plan=plan, profile_store=store,
+                policy=policy, aggregator=aggregator,
+                adapt_search_kw=adapt_kw,
                 opt_cfg=AdamWConfig(lr=args.lr, warmup_steps=20))
     n_params = sum(x.size for x in jax.tree.leaves(t.state["params"]))
     print(f"[train] arch={bundle.cfg.name} params={n_params/1e6:.1f}M "
           f"devices={n_dev} start_step={t.step}")
     t0 = time.time()
     done = 0
+    printed_events = 0
     while done < args.steps:
         chunk = min(args.log_every, args.steps - done)
+        if degrade_step is not None and done < degrade_step < done + chunk:
+            chunk = degrade_step - done      # land exactly on the injection
         r = t.run(chunk)
         done += chunk
         dt = time.time() - t0
         tok_s = done * args.global_batch * args.seq / dt
         print(f"[train] step={t.step} loss={r['losses'][-1]:.4f} "
               f"tok/s={tok_s:.0f}")
-        if args.degrade and plan is not None and done >= args.steps // 2:
-            kind, factor = args.degrade.split(":")
-            degraded = t.cluster.degrade(kind, float(factor))
-            res = t.replan(degraded, global_batch=args.global_batch,
-                           seq_len=args.seq, pp_options=[args.pp],
-                           tp_options=[1], micro_bs_options=[1, 2],
-                           require_fit=False, include_tp_comm=False)
-            plan = res.plan
-            print(f"[train] degraded {args.degrade} -> replanned: "
-                  f"{plan.describe()} (migrations={t.migrations})")
-            args.degrade = ""
+        if degrade_kind and plan is not None and done >= degrade_step:
+            if args.adapt:
+                # autonomous path: only distort the telemetry — the
+                # controller detects, replans, gain-gates and migrates
+                t.inject_degrade(degrade_kind, degrade_factor)
+                print(f"[train] injected degrade {degrade_kind}"
+                      f"x{degrade_factor} at step {t.step} — controller "
+                      f"is on its own now")
+            else:
+                degraded = t.cluster.degrade(degrade_kind, degrade_factor)
+                res = t.replan(degraded, global_batch=args.global_batch,
+                               seq_len=args.seq, **search_kw)
+                plan = res.plan
+                print(f"[train] degraded {args.degrade} -> replanned: "
+                      f"{plan.describe()} (migrations={t.migrations})")
+            degrade_kind = None
+        for ev in t.adapt_log[printed_events:]:
+            print(ev.format())
+        printed_events = len(t.adapt_log)
         health = t.schedule_health()
         if health is not None:
             print(f"[train] bubble observed={health['observed_bubble']:.3f} "
                   f"predicted={health['predicted_bubble']:.3f}")
     print(json.dumps({"final_loss": r["losses"][-1], "steps": t.step,
                       "params_m": round(n_params / 1e6, 1),
-                      "replans": t.replans}))
+                      "replans": t.replans,
+                      "adapt_events": [e.to_dict() for e in t.adapt_log]}))
 
 
 if __name__ == "__main__":

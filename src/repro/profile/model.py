@@ -41,6 +41,11 @@ from repro.profile.store import ProfileStore
 # device_kind under which device-independent (HLO-derived) entries live
 CALIB_DEVICE = "hlo"
 
+# trust weight of ``provenance: bucketed`` telemetry folds (timer mode
+# spreads a whole-step time evenly over ticks, so those entries carry no
+# real per-stage skew) relative to exact callback-mode observations
+BUCKETED_WEIGHT = 0.25
+
 
 class ProfiledCostModel:
     def __init__(self, store: ProfileStore,
@@ -159,8 +164,11 @@ class ProfiledCostModel:
         ``observed_stage_tick`` entries matching (device kind, arch,
         seq_len, tp) — any schedule/stage/pp/vpp: every observation is one
         more sample of how fast this device kind runs one (padded) layer.
-        Returns None when no telemetry exists for the pair (the caller
-        falls down the serving hierarchy)."""
+        Entries folded by timer-mode telemetry (``provenance: bucketed``)
+        are down-weighted by ``BUCKETED_WEIGHT``: they bucket whole steps
+        and carry no per-stage skew, so an exact callback observation must
+        dominate them.  Returns None when no telemetry exists for the pair
+        (the caller falls down the serving hierarchy)."""
         num = den = 0.0
         for e in self.store.entries(dev, "observed_stage_tick"):
             s = e.shape
@@ -172,6 +180,8 @@ class ProfiledCostModel:
             if depth <= 0 or mbs <= 0:
                 continue
             n = e.value.get("n", 1.0)
+            if e.meta.get("provenance") == "bucketed":
+                n *= BUCKETED_WEIGHT
             num += n * e.value["tick_s"] / (depth * mbs)
             den += n
         if den <= 0.0:

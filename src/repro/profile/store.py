@@ -140,6 +140,46 @@ class ProfileStore:
         e.meta.update(default_meta())
         return e
 
+    def merge(self, other: "ProfileStore",
+              ops: Optional[List[str]] = None) -> int:
+        """Fold-merge every entry of ``other`` into this store (multi-host
+        telemetry aggregation: each process folds observations into its own
+        local store; merging the remote stores yields the same running
+        means as if every observation had been folded into one store,
+        because n-weighted means compose exactly).
+
+        ``ops`` restricts the merge to those entry kinds (None = all).
+        Entries missing an ``n`` count are treated as single observations.
+        When the same key carries different ``provenance`` metadata on the
+        two sides, the merged entry keeps the LESS trusted one
+        (``bucketed`` over ``exact``) so a mixed fold is never over-trusted.
+        Returns the number of entries merged in."""
+        merged = 0
+        for e in other.entries():
+            if ops is not None and e.op not in ops:
+                continue
+            mine = self.get(e.device_kind, e.op, e.shape)
+            if mine is None:
+                self.put(e.device_kind, e.op, e.shape, dict(e.value),
+                         meta=dict(e.meta))
+                merged += 1
+                continue
+            na = mine.value.get("n", 1.0)
+            nb = e.value.get("n", 1.0)
+            for f, v in e.value.items():
+                if f == "n":
+                    continue
+                if f in mine.value:
+                    mine.value[f] = (mine.value[f] * na + v * nb) / (na + nb)
+                else:
+                    mine.value[f] = v
+            if "n" in mine.value or "n" in e.value:
+                mine.value["n"] = na + nb
+            if e.meta.get("provenance") == "bucketed":
+                mine.meta["provenance"] = "bucketed"
+            merged += 1
+        return merged
+
     # ----------------------------------------------------------- read -----
     def get(self, device_kind: str, op: str,
             shape: Dict[str, Any]) -> Optional[Entry]:

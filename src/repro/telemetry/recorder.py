@@ -22,9 +22,16 @@ recording modes:
     right mode on a device farm where per-tick callbacks would sync the
     step.
 
-Both modes emit the same observations, distinguished by provenance
-(``meta["telemetry"]``).  ``fold_into`` writes them into a repro.profile
-ProfileStore under two entry kinds:
+Both modes emit the same observations, distinguished by provenance:
+``meta["telemetry"]`` records the mode and ``meta["provenance"]`` its
+trust class — ``exact`` for callback-mode folds (real tick boundaries)
+and ``bucketed`` for timer-mode folds, which spread a whole-step time
+evenly over ticks and therefore carry NO per-stage skew information.
+Consumers must weight ``bucketed`` observations below ``exact`` ones
+(repro.profile.model.BUCKETED_WEIGHT; repro.adapt.AdaptConfig
+.bucketed_weight) instead of treating them as equally trustworthy.
+``fold_into`` writes them into a repro.profile ProfileStore under two
+entry kinds:
 
   observed_stage_tick  {arch, seq_len, tp, schedule, stage, pp, vpp,
                         layers, padded_layers, micro_bs} -> tick_s
@@ -39,6 +46,19 @@ ProfileStore under two entry kinds:
       Comparing it against the predictor's bubble for the same schedule
       is what separates "slow kernels" (stage ticks up, bubble flat) from
       "wrong schedule" (bubble up) — ROADMAP item 4.
+
+Invariants (tick-attribution semantics, locked by tests/test_replan.py):
+  * callback mode only keeps COMPLETE ordered mark sequences 0..n_ticks —
+    a torn sequence (retrace, skipped tick) is discarded, never folded;
+  * the first kept step after construction is dropped (``drop_first``):
+    it pays jit compilation, not steady-state time;
+  * single-process attribution shares each tick's time equally across the
+    pp*vpp virtual slots — exact for the executed SPMD program on one
+    host, where every slot computes the same padded depth every tick; a
+    multi-host run records per-pod times under per-island device kinds
+    instead (repro.adapt.aggregate gathers them before replan);
+  * per-layer normalization must divide by ``padded_layers`` (the depth
+    the slot actually executes), never by the real ``layers``.
 """
 from __future__ import annotations
 
@@ -179,20 +199,30 @@ class StageTelemetry:
                   seq_len: int, tp: int, schedule: str,
                   layers_per_vstage: Sequence[int],
                   padded_per_stage: Sequence[int],
-                  micro_bs_per_stage: Sequence[int]) -> int:
+                  micro_bs_per_stage: Sequence[int],
+                  stage_scale: Optional[Sequence[float]] = None) -> int:
         """Fold every not-yet-folded step observation into ``store`` as
         ``observed_stage_tick`` / ``observed_bubble`` running means.
         ``device_kinds`` names the device kind hosting each PHYSICAL
         stage; ``padded_per_stage`` its executed (padding included) layer
-        depth per tick.  Returns the number of steps folded."""
+        depth per tick.  ``stage_scale`` optionally multiplies each
+        physical stage's tick time before folding — the straggler
+        *injection* hook (Trainer.inject_degrade): on a serial CPU mesh a
+        degraded device cannot actually slow down, so the injection makes
+        the telemetry report what that hardware would.  Returns the number
+        of steps folded."""
         folded = 0
-        meta_extra = {"telemetry": self.mode}
+        meta_extra = {"telemetry": self.mode,
+                      "provenance": ("bucketed" if self.mode == "timer"
+                                     else "exact")}
         for durs in self._fresh:
             ticks = self._stage_ticks(durs)
             bub = self._bubble_of(durs)
             for i in range(self.pp):
                 tick_s = sum(ticks[ch * self.pp + i]
                              for ch in range(self.vpp))
+                if stage_scale is not None:
+                    tick_s *= stage_scale[i]
                 layers = sum(layers_per_vstage[ch * self.pp + i]
                              for ch in range(self.vpp))
                 e = store.fold(

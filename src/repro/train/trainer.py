@@ -19,7 +19,14 @@
     online profile once dense enough, with degradation-scaled observed
     times and the incumbent plan as the search baseline — then LIVE
     MIGRATES the optimizer+param state onto the new plan's stage/chunk
-    assignment (in-memory reshard; checkpoint round-trip fallback).
+    assignment (in-memory reshard; checkpoint round-trip fallback);
+  * autonomous adaptation: given a ``repro.adapt.ReplanPolicy`` the
+    trainer consults it every telemetry step and invokes
+    ``degrade``+``replan``+migrate ITSELF — no operator in the loop —
+    recording every decision in ``adapt_log`` (structured AdaptEvents;
+    docs/adaptation.md).  A ``repro.adapt`` aggregator gathers every
+    process's telemetry folds into one per-island profile before the
+    policy evaluates, so multi-pod runs adapt on the cluster view.
 """
 from __future__ import annotations
 
@@ -59,6 +66,14 @@ class TrainerConfig:
     # observations (density threshold: a couple of steps is noise, not a
     # profile)
     replan_profile_min_obs: float = 8.0
+    # with a policy + aggregator attached, gather the cluster-wide
+    # telemetry view every this many steps.  The gather happens at a
+    # step-synchronized point of run() — EVERY process executes it at the
+    # same step — because a collective aggregator (process_allgather)
+    # invoked from a data-dependent branch would deadlock processes whose
+    # local policy state diverged.  Raise it when per-step allgathers are
+    # too chatty for the fabric.
+    aggregate_every: int = 1
     # stage telemetry mode for the pipeline step: "auto" picks per-tick
     # host callbacks on CPU backends and cheap step-bucketed timers
     # elsewhere; "off" disables recording entirely
@@ -70,13 +85,26 @@ class Trainer:
                  cluster: Optional[ClusterSpec] = None,
                  plan: Optional[ParallelPlan] = None,
                  opt_cfg: Optional[AdamWConfig] = None,
-                 profile_store=None):
+                 profile_store=None, policy=None, aggregator=None,
+                 adapt_search_kw: Optional[Dict[str, Any]] = None):
         self.bundle = bundle
         self.mesh = mesh
         self.cfg = cfg
         self.cluster = cluster
         self.plan = plan
         self.profile_store = profile_store   # repro.profile.ProfileStore
+        # autonomous adaptation: policy (repro.adapt.ReplanPolicy) decides
+        # when to replan; aggregator (repro.adapt aggregators) folds every
+        # process's telemetry into one cluster view first; adapt_search_kw
+        # constrains the controller's searches (pp/tp options etc.)
+        self.policy = policy
+        self.aggregator = aggregator
+        self.adapt_search_kw = dict(adapt_search_kw or {})
+        self.adapt_log: list = []        # structured AdaptEvents
+        self._adapt_seen = 0             # telemetry steps already shown
+        self._inject_scale: Dict[str, float] = {}
+        self._cluster_view = None        # cached aggregator.gather result
+        self._pred_bubble = None         # (plan, cluster, bubble) cache
         self.opt_cfg = opt_cfg or AdamWConfig()
         self.rules = ShardingRules(bundle.cfg, tp=cfg.tp,
                                    dp_axes=("data",))
@@ -249,6 +277,19 @@ class Trainer:
                     self._slow = 0
                     if on_straggler is not None:
                         on_straggler(self)
+            # --- autonomous adaptation (repro.adapt closed loop) ---
+            if self.policy is not None:
+                # the gather runs HERE, unconditionally on a step cadence:
+                # self.step is identical across SPMD processes, so a
+                # collective aggregator is entered by everyone together
+                # (policy/telemetry state may diverge per process and must
+                # never gate a collective)
+                if self.aggregator is not None and \
+                        self.profile_store is not None and \
+                        self.step % max(1, self.cfg.aggregate_every) == 0:
+                    self._cluster_view = self.aggregator.gather(
+                        self.profile_store)
+                self._maybe_adapt()
             if self.step % self.cfg.ckpt_every == 0:
                 self.ckpt.save_async(self.step, self.state,
                                      extra=self._ckpt_extra())
@@ -303,7 +344,142 @@ class Trainer:
             layers_per_vstage=vl,
             padded_per_stage=[plan.vpp * lmax] * plan.pp,
             micro_bs_per_stage=[plan.stage_micro_bs(i)
-                                for i in range(plan.pp)])
+                                for i in range(plan.pp)],
+            stage_scale=(self._stage_scales()
+                         if self._inject_scale else None))
+
+    # ------------------------------------ autonomous adaptation (adapt) ---
+    def inject_degrade(self, device_kind: str, factor: float) -> None:
+        """Straggler INJECTION: make the telemetry report ``device_kind``'s
+        stages as ``factor``x slower from now on.  On a serial CPU mesh a
+        degraded device cannot actually slow down, so this is the testing/
+        demo hook that drives the autonomous controller end-to-end (the
+        launch layer wires ``--degrade KIND:FACTOR@STEP`` to it); the
+        observations it distorts are exactly what real degraded hardware
+        would have produced.  Injections compose multiplicatively per
+        kind; requires a cluster (to map stages to kinds)."""
+        if self.cluster is None:
+            raise ValueError("inject_degrade needs a cluster "
+                             "(stage -> device kind mapping)")
+        if factor <= 0:
+            raise ValueError(f"factor must be > 0, got {factor}")
+        if all(g.device.name != device_kind for g in self.cluster.groups):
+            known = sorted({g.device.name for g in self.cluster.groups})
+            raise ValueError(f"unknown device kind {device_kind!r}; "
+                             f"cluster has {known}")
+        self._inject_scale[device_kind] = \
+            self._inject_scale.get(device_kind, 1.0) * factor
+
+    def _stage_scales(self):
+        """Per-PHYSICAL-stage injected tick multipliers (1.0 = healthy)."""
+        if self.cluster is None or self.plan is None:
+            return [1.0] * (self.plan.pp if self.plan else 0)
+        return [self._inject_scale.get(
+            self.cluster.groups[st.group].device.name, 1.0)
+            for st in self.plan.stages]
+
+    def _merged_store(self):
+        """The cluster-wide profile view: every process's telemetry folds
+        gathered into one store (repro.adapt aggregators; identity on a
+        single process / without an aggregator).  The adaptive run loop
+        refreshes the view at a step-synchronized cadence
+        (``aggregate_every``) and this serves the cached copy — calling a
+        COLLECTIVE aggregator from a data-dependent code path (a policy
+        decision, a health probe) would deadlock diverged processes.  The
+        lazy fallback below only fires outside an adaptive loop (manual
+        replan), where the caller owns cross-process symmetry."""
+        if self.profile_store is None or self.aggregator is None:
+            return self.profile_store
+        if self._cluster_view is not None:
+            return self._cluster_view
+        return self.aggregator.gather(self.profile_store)
+
+    def _stage_tick_obs(self):
+        """Most recent per-PHYSICAL-stage forward tick seconds (each
+        stage's vpp chunks summed, injected degradation applied) — the
+        policy's straggler signal.  None before the first kept step."""
+        ticks = self.telemetry.stage_ticks() if self.telemetry else None
+        if ticks is None:
+            return None
+        pp, vpp = self.plan.pp, self.plan.vpp
+        scales = self._stage_scales()
+        return [scales[i] * sum(ticks[ch * pp + i] for ch in range(vpp))
+                for i in range(pp)]
+
+    def _emit(self, event) -> None:
+        self.adapt_log.append(event)
+
+    def _maybe_adapt(self) -> None:
+        """Consult the policy on each NEW telemetry observation; when it
+        fires, search — and migrate only if the predicted gain clears the
+        policy's ε gate.  The whole decision trail lands in ``adapt_log``
+        as structured AdaptEvents."""
+        from repro.adapt import AdaptEvent
+        if self.telemetry is None or not self._pipeline_active() \
+                or self.cluster is None:
+            return       # nothing to replan against without a cluster
+        if self.telemetry.steps <= self._adapt_seen:
+            return                        # no new observation this step
+        self._adapt_seen = self.telemetry.steps
+        health = self.schedule_health()
+        decision = self.policy.observe(
+            self.step, self._stage_tick_obs(),
+            bubble_ratio=(health["ratio"] if health else None),
+            provenance=("bucketed" if self.telemetry.mode == "timer"
+                        else "exact"))
+        if decision is None:
+            return
+        self._emit(AdaptEvent(
+            self.step, "trigger", decision.reason,
+            {"action": decision.action,
+             "signal": round(decision.signal, 4),
+             **({"stage": decision.stage,
+                 "factor": decision.factor}
+                if decision.stage is not None else {})}))
+        if decision.action == "replan-straggler" and self.cluster is not None:
+            kind = self.cluster.groups[
+                self.plan.stages[decision.stage].group].device.name
+            new_cluster = self.cluster.degrade(kind, decision.factor)
+        else:
+            # wrong-schedule signal: same cluster, re-score the schedule
+            # sweep against the observed profile
+            new_cluster = self.cluster
+        try:
+            result = self.plan_for(
+                new_cluster, global_batch=self.cfg.global_batch,
+                seq_len=self.cfg.seq_len, **self.adapt_search_kw)
+        except RuntimeError as e:
+            # no feasible plan on the (degraded) cluster: keep training on
+            # the incumbent rather than killing the loop; cooldown so the
+            # armed signal doesn't re-search every step
+            self.policy.reject(self.step)
+            self._emit(AdaptEvent(self.step, "skip",
+                                  f"search failed: {e}", {}))
+            return
+        gain = result.expected_gain
+        self._emit(AdaptEvent(
+            self.step, "replan", f"searched {result.evaluated} candidates",
+            {"winner": result.plan.describe(),
+             "iter_time": result.prediction.iter_time,
+             "baseline_time": result.baseline_time,
+             "expected_gain": (round(gain, 4) if gain is not None
+                               else None)}))
+        if not self.policy.gain_ok(result):
+            self.policy.reject(self.step)
+            self._emit(AdaptEvent(
+                self.step, "skip",
+                f"expected gain {gain:.4f} below min_gain "
+                f"{self.policy.cfg.min_gain} — migration not worth it",
+                {"expected_gain": round(gain, 4),
+                 "min_gain": self.policy.cfg.min_gain}))
+            return
+        self._adopt(result, new_cluster, migrate="memory")
+        self.policy.reset(self.step)
+        self._adapt_seen = 0
+        self._emit(AdaptEvent(
+            self.step, "migrate", "adopted the searched plan live",
+            {"plan": result.plan.describe(),
+             "migrations": dict(self.migrations)}))
 
     # ----------------------------------------------- schedule diagnostics --
     def schedule_health(self) -> Optional[Dict[str, float]]:
@@ -318,15 +494,24 @@ class Trainer:
         if observed is None and self.profile_store is not None:
             from repro.profile.model import ProfiledCostModel
             from repro.profile.runner import device_kind
-            observed = ProfiledCostModel(self.profile_store).observed_bubble(
+            observed = ProfiledCostModel(self._merged_store()).observed_bubble(
                 device_kind(), self.bundle.cfg, self.plan.schedule,
                 self.plan.pp, self.plan.vpp, self.plan.micro_batches)
         if observed is None:
             return None
-        from repro.core.predictor import PerformancePredictor
-        predicted = PerformancePredictor(
-            self.cluster, self.bundle.cfg,
-            include_tp_comm=False).predict(self.plan).bubble_frac
+        # the predicted bubble is constant for a (plan, cluster) pair, and
+        # the adaptive loop asks every step — simulate once per pair, not
+        # per step (cache invalidates itself when replan swaps either)
+        cached = self._pred_bubble
+        if cached is not None and cached[0] is self.plan \
+                and cached[1] is self.cluster:
+            predicted = cached[2]
+        else:
+            from repro.core.predictor import PerformancePredictor
+            predicted = PerformancePredictor(
+                self.cluster, self.bundle.cfg,
+                include_tp_comm=False).predict(self.plan).bubble_frac
+            self._pred_bubble = (self.plan, self.cluster, predicted)
         return {"observed_bubble": observed, "predicted_bubble": predicted,
                 "ratio": observed / max(predicted, 1e-9)}
 
@@ -359,8 +544,10 @@ class Trainer:
         multi-island deployment folds per-island kinds instead).  Device
         kinds the new cluster reports as degraded relative to the one the
         observations were taken on get their served times scaled up by
-        the degradation factor."""
-        store = self.profile_store
+        the degradation factor.  With an aggregator attached the source
+        reads the CLUSTER-wide merged store (every process's telemetry
+        folds), not this process's 1/N view."""
+        store = self._merged_store()
         if store is None:
             return None
         # count only observations the replan search can actually consume:
@@ -397,17 +584,36 @@ class Trainer:
         ``migrate``: "memory" reshards optimizer+param state in memory
         (checkpoint round-trip only as a fallback); "checkpoint" forces
         the round-trip through the just-written checkpoint."""
-        if migrate not in ("memory", "checkpoint"):
-            raise ValueError(f"unknown migrate mode {migrate!r}")
+        result = self.plan_for(new_cluster, global_batch=global_batch,
+                               seq_len=seq_len, **search_kw)
+        self._adopt(result, new_cluster, migrate=migrate)
+        return result
+
+    def plan_for(self, new_cluster: ClusterSpec, *, global_batch: int,
+                 seq_len: int, **search_kw):
+        """The search half of ``replan``, WITHOUT adopting the result:
+        searches ``new_cluster`` under the trainer's observed cost source
+        (degradation-scaled, cluster-wide via the aggregator) with the
+        incumbent plan as the baseline.  The adaptation controller calls
+        this first and gates ``_adopt`` on the result's
+        ``expected_gain`` — searching is cheap, migrating is not."""
         if "cost_source" not in search_kw:
             src = self.profiled_cost_source(new_cluster)
             if src is not None:
                 search_kw["cost_source"] = src
         if self.plan is not None:
             search_kw.setdefault("baseline_plan", self.plan)
-        result = planner_mod.search(new_cluster, self.bundle.cfg,
-                                    global_batch=global_batch,
-                                    seq_len=seq_len, **search_kw)
+        return planner_mod.search(new_cluster, self.bundle.cfg,
+                                  global_batch=global_batch,
+                                  seq_len=seq_len, **search_kw)
+
+    def _adopt(self, result, new_cluster: ClusterSpec,
+               migrate: str = "memory") -> None:
+        """The commit half of ``replan``: checkpoint-now (crash safety),
+        swap in the searched plan, rebuild the step, and live-migrate the
+        optimizer+param state onto the new layout."""
+        if migrate not in ("memory", "checkpoint"):
+            raise ValueError(f"unknown migrate mode {migrate!r}")
         self.ckpt.wait()
         old_layout = self._state_layout()
         # durable pre-migration checkpoint in the OLD layout (crash safety
@@ -436,4 +642,3 @@ class Trainer:
         # compile step is neither folded into the profile nor flagged slow
         self._ewma = None
         self._slow = 0
-        return result

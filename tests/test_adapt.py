@@ -1,0 +1,463 @@
+"""Adaptation-controller lockdown suite (repro.adapt — the closed loop,
+autonomous edition):
+
+  * ReplanPolicy unit tests — hysteresis never flaps on oscillating
+    bubble ratios, cooldown is respected, the min-expected-gain gate
+    blocks unprofitable migrations, bucketed (timer-mode) observations
+    earn less trust;
+  * planner expected-gain accounting (PlannerResult.baseline_time /
+    .expected_gain under a shared cost source);
+  * multi-host telemetry aggregation — ProfileStore fold-merge is exact
+    (n-weighted running means compose), the in-memory fan-in builds one
+    per-island view from per-process stores, and the allgather
+    aggregator's wire format round-trips;
+  * provenance fix — timer-mode folds are marked ``bucketed`` and
+    down-weighted by the cost model;
+  * the e2e acceptance scenario on a CPU mesh: inject a degrade mid-run
+    and the controller detects, replans, gain-gates and live-migrates BY
+    ITSELF — with the final train state bit-exact against the PR-4
+    manual degrade->replan path, and never migrating when the predicted
+    gain is below ε.
+"""
+import dataclasses
+import tempfile
+import types
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.adapt import (AdaptConfig, InMemoryFanIn, LocalAggregator,
+                         ProcessAllGatherAggregator, ReplanPolicy,
+                         default_aggregator, events_json, merge_stores)
+from repro.core import cluster as C
+from repro.core import planner
+from repro.core.plan import ParallelPlan, StagePlacement
+from repro.models import registry
+from repro.profile.model import BUCKETED_WEIGHT, ProfiledCostModel
+from repro.profile.store import ProfileStore
+from repro.telemetry import StageTelemetry
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+# ------------------------------------------------------------ policy unit --
+def _cfg(**kw):
+    base = dict(straggler_enter=2.0, straggler_exit=1.5, bubble_enter=1.5,
+                bubble_exit=1.2, patience=2, cooldown=4, baseline_steps=2,
+                ewma=1.0, min_gain=0.05)
+    base.update(kw)
+    return AdaptConfig(**base)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="straggler_enter"):
+        AdaptConfig(straggler_enter=1.0, straggler_exit=1.5)
+    with pytest.raises(ValueError, match="bubble_enter"):
+        AdaptConfig(bubble_enter=1.0, bubble_exit=1.2)
+    with pytest.raises(ValueError, match="patience"):
+        AdaptConfig(patience=0.5)
+    with pytest.raises(ValueError, match="min_gain"):
+        AdaptConfig(min_gain=1.0)
+    with pytest.raises(ValueError, match="bucketed_weight"):
+        AdaptConfig(bucketed_weight=0.0)
+    with pytest.raises(ValueError, match="ewma"):
+        AdaptConfig(ewma=0.0)
+
+
+def test_hysteresis_no_flap_crossing_exit():
+    """A bubble ratio oscillating ACROSS the exit band never accumulates
+    patience: each dip below exit disarms and resets the counter."""
+    p = ReplanPolicy(_cfg(patience=2, cooldown=0))
+    for step in range(40):
+        ratio = 1.6 if step % 2 == 0 else 1.1   # 1.1 <= exit (1.2)
+        assert p.observe(step, None, bubble_ratio=ratio) is None
+    assert p.triggers == 0
+
+
+def test_hysteresis_holds_armed_inside_band():
+    """Oscillating INSIDE the band (below enter, above exit) keeps the
+    signal armed — one clean trigger, then cooldown silence; no flapping
+    (trigger spacing always > cooldown)."""
+    p = ReplanPolicy(_cfg(patience=3, cooldown=10))
+    fired = []
+    for step in range(30):
+        ratio = 1.6 if step % 2 == 0 else 1.4   # 1.4 > exit, < enter
+        if p.observe(step, None, bubble_ratio=ratio) is not None:
+            fired.append(step)
+    assert fired and fired[0] == 2          # armed at 0, patience 3 at 2
+    assert all(b - a > 10 for a, b in zip(fired, fired[1:]))
+    assert len(fired) <= 3
+
+
+def test_cooldown_respected_under_sustained_signal():
+    p = ReplanPolicy(_cfg(patience=2, cooldown=6))
+    fired = [step for step in range(30)
+             if p.observe(step, None, bubble_ratio=5.0) is not None]
+    assert fired[0] == 1
+    # after a trigger: 6 observed steps of cooldown, then re-arm (1 obs)
+    # and re-accumulate patience (1 more) => spacing exactly 8
+    assert all(b - a == 8 for a, b in zip(fired, fired[1:]))
+
+
+def test_straggler_trigger_names_stage_and_factor():
+    p = ReplanPolicy(_cfg(patience=2, baseline_steps=2, ewma=1.0))
+    assert p.observe(0, [1.0, 1.0]) is None      # baseline sample 1
+    assert p.observe(1, [1.0, 1.0]) is None      # baseline formed
+    assert p.observe(2, [1.0, 4.0]) is None      # armed
+    d = p.observe(3, [1.0, 4.0])                 # patience crossed
+    assert d is not None and d.action == "replan-straggler"
+    assert d.stage == 1
+    assert d.factor == pytest.approx(4.0)
+    assert p.cooling
+
+
+def test_bucketed_observations_earn_less_patience():
+    """Timer-mode (bucketed) telemetry counts bucketed_weight toward
+    patience: with weight 0.5 and patience 2, the trigger needs 4 armed
+    observations instead of 2."""
+    exact = ReplanPolicy(_cfg(patience=2, bucketed_weight=0.5))
+    bucketed = ReplanPolicy(_cfg(patience=2, bucketed_weight=0.5))
+    for step in range(2):
+        exact.observe(step, [1.0, 1.0])
+        bucketed.observe(step, [1.0, 1.0], provenance="bucketed")
+    exact_steps = bucketed_steps = None
+    for k in range(10):
+        if exact_steps is None and \
+                exact.observe(2 + k, [1.0, 4.0]) is not None:
+            exact_steps = k + 1
+        if bucketed_steps is None and \
+                bucketed.observe(2 + k, [1.0, 4.0],
+                                 provenance="bucketed") is not None:
+            bucketed_steps = k + 1
+    assert exact_steps == 2
+    assert bucketed_steps == 4
+
+
+def test_stage_count_change_reforms_baseline():
+    p = ReplanPolicy(_cfg(patience=2, baseline_steps=2))
+    p.observe(0, [1.0, 1.0])
+    p.observe(1, [1.0, 1.0])
+    # plan changed: 3 stages now — must not index the stale baseline
+    assert p.observe(2, [1.0, 1.0, 1.0]) is None
+    assert p.observe(3, [1.0, 1.0, 1.0]) is None
+    assert p.observe(4, [1.0, 1.0, 9.0]) is None
+    assert p.observe(5, [1.0, 1.0, 9.0]).stage == 2
+
+
+def test_min_gain_gate():
+    p = ReplanPolicy(_cfg(min_gain=0.05))
+    assert not p.gain_ok(types.SimpleNamespace(expected_gain=0.01))
+    assert p.gain_ok(types.SimpleNamespace(expected_gain=0.2))
+    # no scored incumbent (fresh search / node loss): nothing to stay on
+    assert p.gain_ok(types.SimpleNamespace(expected_gain=None))
+
+
+# ------------------------------------------------- planner expected gain ---
+def _two_island_cluster():
+    return C.ClusterSpec(groups=(C.NodeGroup(C.AMD, 1, accel_per_node=1),
+                                 C.NodeGroup(C.GPU_A, 1, accel_per_node=1)))
+
+
+SEARCH_KW = dict(global_batch=8, seq_len=32, pp_options=[2],
+                 tp_options=[1], micro_bs_options=[2], require_fit=False,
+                 include_tp_comm=False, schedule="1f1b",
+                 explore_orders=False)
+
+
+def test_planner_surfaces_expected_gain():
+    from repro.configs.llama3_8b import CONFIG
+    cfg = dataclasses.replace(CONFIG, num_layers=6)
+    cl = _two_island_cluster()
+    base = planner.search(cl, cfg, **SEARCH_KW)
+    assert base.baseline_time is None and base.expected_gain is None
+    res = planner.search(cl.degrade("gpu-a", 4.0), cfg,
+                         baseline_plan=base.plan, **SEARCH_KW)
+    assert res.baseline_time == \
+        dict(res.log)[f"baseline {base.plan.describe()}"]
+    assert res.expected_gain == pytest.approx(
+        1.0 - res.prediction.iter_time / res.baseline_time)
+    # the winner is never predicted worse than the scored incumbent
+    assert res.expected_gain >= 0.0
+
+
+# ----------------------------------------------- aggregation (multi-host) --
+def test_store_merge_equals_single_store_folds():
+    """Fold-merge is exact: N per-process stores merged == every
+    observation folded into one store (n-weighted means compose)."""
+    shape = {"arch": "m", "stage": 0}
+    obs = [1.0, 3.0, 5.0, 7.0, 11.0]
+    one = ProfileStore()
+    a, b = ProfileStore(), ProfileStore()
+    for i, v in enumerate(obs):
+        one.fold("amd", "observed_stage_tick", shape, "tick_s", v)
+        (a if i % 2 == 0 else b).fold("amd", "observed_stage_tick",
+                                      shape, "tick_s", v)
+    merged = merge_stores([a, b])
+    e, ref = merged.get("amd", "observed_stage_tick", shape), \
+        one.get("amd", "observed_stage_tick", shape)
+    assert e.value["n"] == ref.value["n"]
+    assert e.value["tick_s"] == pytest.approx(ref.value["tick_s"])
+
+
+def test_inmemory_fanin_builds_per_island_view():
+    """Two simulated processes on different islands: the fan-in yields ONE
+    store holding both device kinds — what the policy and the replan
+    search must see — and gathering twice is idempotent."""
+    tick = {"arch": "m", "seq_len": 32, "tp": 1, "schedule": "1f1b",
+            "pp": 2, "vpp": 1, "layers": 3, "padded_layers": 3,
+            "micro_bs": 2}
+    bub = {"arch": "m", "schedule": "1f1b", "pp": 2, "vpp": 1, "m": 4}
+    proc0, proc1 = ProfileStore(), ProfileStore()
+    for _ in range(3):
+        proc0.fold("amd", "observed_stage_tick", {**tick, "stage": 0},
+                   "tick_s", 0.3)
+        proc0.fold("amd", "observed_bubble", bub, "bubble_frac", 0.2)
+        proc1.fold("gpu-a", "observed_stage_tick", {**tick, "stage": 1},
+                   "tick_s", 0.9)
+        proc1.fold("gpu-a", "observed_bubble", bub, "bubble_frac", 0.25)
+    agg = InMemoryFanIn([proc1])
+    merged = agg.gather(proc0)
+    kinds = {e.device_kind for e in merged.entries(op="observed_stage_tick")}
+    assert kinds == {"amd", "gpu-a"}
+    cfg = types.SimpleNamespace(name="m")
+    pcm = ProfiledCostModel(merged)
+    assert pcm.stage_tick_per_layer("amd", cfg, 32, 1) == \
+        pytest.approx(0.3 / (3 * 2))
+    assert pcm.stage_tick_per_layer("gpu-a", cfg, 32, 1) == \
+        pytest.approx(0.9 / (3 * 2))
+    again = agg.gather(proc0)
+    for e in merged.entries():
+        assert again.get(e.device_kind, e.op, e.shape).value == e.value
+    # the per-process stores were not mutated by the gather
+    assert len(proc0.entries()) == 2 and len(proc1.entries()) == 2
+
+
+def test_allgather_wire_format_roundtrip():
+    """The allgather aggregator's payload encode/merge path, exercised
+    without a multi-process runtime: a remote store's observed entries
+    survive the JSON wire format and fold-merge exactly."""
+    local, remote = ProfileStore(), ProfileStore()
+    shape = {"arch": "m", "stage": 0}
+    local.fold("amd", "observed_stage_tick", shape, "tick_s", 1.0)
+    remote.fold("gpu-a", "observed_stage_tick", {**shape, "stage": 1},
+                "tick_s", 2.0)
+    remote.fold("amd", "observed_stage_tick", shape, "tick_s", 3.0)
+    # calibration entries stay host-local: never shipped
+    remote.put("hlo", "layer_cost", {"arch": "m", "seq_len": 32},
+               {"flops_fwd": 1e9})
+    agg = ProcessAllGatherAggregator()
+    merged = agg._merge_payloads(local, [agg._encode(remote)])
+    assert merged.get("amd", "observed_stage_tick", shape).value == \
+        {"tick_s": 2.0, "n": 2.0}
+    assert merged.get("gpu-a", "observed_stage_tick",
+                      {**shape, "stage": 1}).value["tick_s"] == 2.0
+    assert merged.get("hlo", "layer_cost",
+                      {"arch": "m", "seq_len": 32}) is None
+    # single-process gather is the identity (no copy, no network)
+    assert agg.gather(local) is local
+    assert isinstance(default_aggregator(), LocalAggregator)
+
+
+# --------------------------------------------------- provenance (fix) ------
+def _feed_ticks(tele, durs):
+    """Replay one step's tick marks with a controlled clock."""
+    from repro.telemetry import recorder as rec
+    clock = {"t": 100.0}
+    orig = rec.time
+    rec.time = types.SimpleNamespace(perf_counter=lambda: clock["t"])
+    try:
+        tele.on_tick(0)
+        for t in range(1, tele.n_ticks + 1):
+            clock["t"] += durs[t - 1]
+            tele.on_tick(t)
+    finally:
+        rec.time = orig
+
+
+def _fold_kw(**kw):
+    base = dict(arch="m", seq_len=32, tp=1, schedule="1f1b",
+                layers_per_vstage=[3, 3], padded_per_stage=[3, 3],
+                micro_bs_per_stage=[2, 2])
+    base.update(kw)
+    return base
+
+
+def test_timer_folds_marked_bucketed_callback_exact():
+    st = ProfileStore()
+    timer = StageTelemetry(pp=2, vpp=1, m=4, mode="timer", drop_first=False)
+    timer.observe_step(0.9)
+    timer.fold_into(st, ["cpu", "cpu"], **_fold_kw())
+    cb = StageTelemetry(pp=2, vpp=1, m=4, mode="callback", drop_first=False)
+    _feed_ticks(cb, [0.5] * (cb.n_ticks + 1))
+    cb.fold_into(st, ["amd", "amd"], **_fold_kw())
+    for e in st.entries("cpu"):
+        assert e.meta["provenance"] == "bucketed"
+    for e in st.entries("amd"):
+        assert e.meta["provenance"] == "exact"
+
+
+def test_bucketed_entries_downweighted_in_cost_model():
+    """An exact callback observation must dominate a bucketed timer fold
+    of the same (kind, arch, seq_len, tp): the serving mean weights
+    bucketed entries by BUCKETED_WEIGHT."""
+    st = ProfileStore()
+    shape = dict(arch="m", seq_len=32, tp=1, schedule="1f1b", pp=2, vpp=1,
+                 layers=2, padded_layers=2, micro_bs=1)
+    st.fold("cpu", "observed_stage_tick", {**shape, "stage": 0},
+            "tick_s", 2.0)                      # exact: 1.0 per layer-seq
+    e = st.fold("cpu", "observed_stage_tick", {**shape, "stage": 1},
+                "tick_s", 20.0)                 # bucketed: 10.0
+    e.meta["provenance"] = "bucketed"
+    got = ProfiledCostModel(st).stage_tick_per_layer(
+        "cpu", types.SimpleNamespace(name="m"), 32, 1)
+    want = (1.0 * 1.0 + BUCKETED_WEIGHT * 10.0) / (1.0 + BUCKETED_WEIGHT)
+    assert got == pytest.approx(want)
+    # merge keeps the LESS trusted provenance on collision
+    other = ProfileStore()
+    other.fold("cpu", "observed_stage_tick", {**shape, "stage": 0},
+               "tick_s", 2.0).meta["provenance"] = "bucketed"
+    merged = merge_stores([st, other])
+    assert merged.get("cpu", "observed_stage_tick",
+                      {**shape, "stage": 0}).meta["provenance"] == "bucketed"
+
+
+def test_fold_into_stage_scale_injects_skew():
+    st = ProfileStore()
+    tele = StageTelemetry(pp=2, vpp=1, m=4, mode="callback",
+                          drop_first=False)
+    _feed_ticks(tele, [0.5] * (tele.n_ticks + 1))
+    tele.fold_into(st, ["cpu", "cpu"], **_fold_kw(),
+                   stage_scale=[1.0, 3.0])
+    def tick(stage, layers):
+        return st.get("cpu", "observed_stage_tick",
+                      dict(arch="m", seq_len=32, tp=1, schedule="1f1b",
+                           stage=stage, pp=2, vpp=1, layers=layers,
+                           padded_layers=3, micro_bs=2)).value["tick_s"]
+    assert tick(1, 3) == pytest.approx(3.0 * tick(0, 3))
+
+
+# --------------------------------------------- e2e: the autonomous loop ----
+ADAPT_SEARCH_KW = {k: v for k, v in SEARCH_KW.items()
+                   if k not in ("global_batch", "seq_len")}
+
+
+def _mk_trainer(tmp, policy=None, aggregator=None):
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    bundle = registry.get_bundle("llama3-8b", smoke=True, num_layers=6)
+    cl = _two_island_cluster()
+    plan = ParallelPlan(stages=(StagePlacement(0, 3, 1, 1, False),
+                                StagePlacement(1, 3, 1, 1, True)),
+                        micro_bs=2, global_batch=8, seq_len=32)
+    t = Trainer(bundle, mesh,
+                TrainerConfig(global_batch=8, seq_len=32,
+                              ckpt_dir=str(Path(tmp) / "ckpt"),
+                              ckpt_every=100, replan_profile_min_obs=4),
+                cluster=cl, plan=plan, profile_store=ProfileStore(),
+                policy=policy, aggregator=aggregator,
+                adapt_search_kw=ADAPT_SEARCH_KW)
+    return t
+
+
+@pytest.fixture(scope="module")
+def auto_e2e():
+    """The acceptance scenario: healthy steps -> injected degrade ->
+    the controller detects, replans and live-migrates with NO caller
+    intervention."""
+    tmp = tempfile.mkdtemp()
+    policy = ReplanPolicy(_cfg(patience=2, cooldown=4, baseline_steps=2,
+                               ewma=1.0, min_gain=0.0))
+    t = _mk_trainer(tmp, policy=policy)
+    r1 = t.run(4)
+    t.inject_degrade("gpu-a", 8.0)
+    r2 = t.run(6)
+    return dict(trainer=t, policy=policy, r1=r1, r2=r2,
+                state=jax.device_get(t.state), total=10)
+
+
+def test_e2e_controller_replans_and_migrates_itself(auto_e2e):
+    t = auto_e2e["trainer"]
+    assert t.replans == 1
+    assert t.migrations["memory"] == 1
+    actions = [e.action for e in t.adapt_log]
+    assert actions.count("trigger") == 1
+    assert actions.count("migrate") == 1
+    assert "skip" not in actions
+    trig = next(e for e in t.adapt_log if e.action == "trigger")
+    assert trig.detail["stage"] == 1              # gpu-a hosts stage 1
+    assert trig.detail["factor"] >= 2.0           # sustained well past enter
+    rep = next(e for e in t.adapt_log if e.action == "replan")
+    assert rep.detail["expected_gain"] > 0.0
+    assert rep.detail["baseline_time"] > rep.detail["iter_time"]
+    # the new plan moved layers off the degraded island
+    deg = sum(st.n_layers for st in t.plan.stages
+              if t.cluster.groups[st.group].device.name == "gpu-a")
+    assert deg < 3
+    assert all(np.isfinite(v) for v in auto_e2e["r2"]["losses"])
+    # structured log serializes (the operator artifact)
+    assert "expected_gain" in events_json(t.adapt_log)
+
+
+def test_e2e_autonomous_bit_exact_vs_manual_path(auto_e2e):
+    """The controller's degrade->replan->migrate produces the SAME final
+    train state, bit for bit, as the PR-4 manual path driven with the
+    controller's own decisions (same trigger step, same estimated
+    factor)."""
+    t = auto_e2e["trainer"]
+    trig = next(e for e in t.adapt_log if e.action == "trigger")
+    tmp = tempfile.mkdtemp()
+    m = _mk_trainer(tmp)                          # no policy: manual
+    m.run(4)
+    m.inject_degrade("gpu-a", 8.0)                # identical telemetry skew
+    m.run(trig.step - 4)                          # up to the trigger step
+    res = m.replan(m.cluster.degrade("gpu-a", trig.detail["factor"]),
+                   global_batch=8, seq_len=32, migrate="memory",
+                   **ADAPT_SEARCH_KW)
+    assert res.plan == t.plan                     # same decision...
+    m.run(auto_e2e["total"] - trig.step)
+    assert m.step == t.step
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)),
+        auto_e2e["state"], jax.device_get(m.state))   # ...same state, bitwise
+
+
+def test_e2e_min_gain_gate_blocks_migration(tmp_path):
+    """Acceptance: the policy never migrates when the predicted gain is
+    below ε — the search runs, the gate rejects, the state stays put."""
+    policy = ReplanPolicy(_cfg(patience=2, cooldown=4, baseline_steps=2,
+                               ewma=1.0, min_gain=0.95))
+    t = _mk_trainer(tmp_path, policy=policy)
+    t.run(4)
+    t.inject_degrade("gpu-a", 8.0)
+    t.run(5)
+    actions = [e.action for e in t.adapt_log]
+    assert "trigger" in actions and "skip" in actions
+    assert "migrate" not in actions
+    assert t.replans == 0 and t.migrations["memory"] == 0
+    skip = next(e for e in t.adapt_log if e.action == "skip")
+    assert skip.detail["expected_gain"] < 0.95
+    assert t.plan.layers == (3, 3)                # incumbent untouched
+
+
+def test_trainer_cost_source_reads_aggregated_view(tmp_path):
+    """With an aggregator attached, the replan cost source opens its
+    density gate on the CLUSTER-wide observation count — remote folds
+    from peer processes included — not this process's 1/N view."""
+    bundle = registry.get_bundle("llama3-8b", smoke=True, num_layers=2)
+    remote = ProfileStore()
+    for _ in range(8):
+        remote.fold("cpu", "observed_layer_step",
+                    {"arch": bundle.cfg.name, "seq_len": 32, "tp": 1},
+                    "per_seq_s", 0.01)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cl = _two_island_cluster()
+    t = Trainer(bundle, mesh,
+                TrainerConfig(global_batch=8, seq_len=32,
+                              ckpt_dir=str(tmp_path / "ckpt"),
+                              replan_profile_min_obs=4),
+                cluster=cl, profile_store=ProfileStore(),
+                aggregator=InMemoryFanIn([remote]))
+    src = t.profiled_cost_source(cl)
+    assert isinstance(src, ProfiledCostModel)     # gate opened by peers
+    t.aggregator = None
+    assert t.profiled_cost_source(cl) is None     # 1/N view: too sparse

@@ -1,0 +1,138 @@
+#!/usr/bin/env python
+"""Docs link / anchor / command checker (the CI ``docs`` job).
+
+Docs rot silently: a renamed file breaks a link, a refactor moves the
+line a source anchor points at, a CLI flag disappears from under a
+runbook.  This checker walks ``docs/*.md`` + ``README.md`` and fails CI
+when:
+
+  1. a relative markdown link does not resolve to an existing file, or
+     its ``#heading`` fragment does not match any heading in the target
+     (GitHub slug rules);
+  2. a backticked ``path:line`` source anchor names a missing file or a
+     line past the end of that file;
+  3. a command quoted in a fenced block does not run: ``python -m
+     repro.X ...`` must exit 0 under ``--help`` (the entrypoint and its
+     argparse surface exist), and ``python <script>.py`` scripts must at
+     least byte-compile.
+
+Run locally:  PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import py_compile
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DOC_FILES = sorted((ROOT / "docs").glob("*.md")) + [ROOT / "README.md"]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+ANCHOR_RE = re.compile(r"`([A-Za-z0-9_./\-]+\.(?:py|md|yml|yaml|json|toml))"
+                       r":(\d+)`")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+FENCE_RE = re.compile(r"```(?:bash|sh|console)\n(.*?)```", re.DOTALL)
+PYMOD_RE = re.compile(r"python\s+-m\s+([A-Za-z0-9_.]+)")
+PYFILE_RE = re.compile(r"python\s+((?:examples|benchmarks|tools)/"
+                       r"[A-Za-z0-9_./\-]+\.py)")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's heading -> anchor slug: lowercase, drop punctuation
+    (keeping alphanumerics, spaces, hyphens, underscores), spaces to
+    hyphens."""
+    h = heading.strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def headings_of(path: Path) -> set:
+    return {github_slug(m.group(1))
+            for m in HEADING_RE.finditer(path.read_text())}
+
+
+def check_links(md: Path, errors: list) -> None:
+    text = md.read_text()
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, frag = target.partition("#")
+        dest = (md.parent / path_part).resolve() if path_part else md
+        if not dest.exists():
+            errors.append(f"{md.relative_to(ROOT)}: broken link {target!r}")
+            continue
+        if frag and dest.suffix == ".md" and \
+                frag not in headings_of(dest):
+            errors.append(f"{md.relative_to(ROOT)}: anchor #{frag} not a "
+                          f"heading of {path_part or md.name}")
+
+
+def check_source_anchors(md: Path, errors: list) -> None:
+    for m in ANCHOR_RE.finditer(md.read_text()):
+        rel, line = m.group(1), int(m.group(2))
+        src = ROOT / rel
+        if not src.exists():
+            errors.append(f"{md.relative_to(ROOT)}: source anchor "
+                          f"{rel}:{line} — file missing")
+        elif line > len(src.read_text().splitlines()):
+            errors.append(f"{md.relative_to(ROOT)}: source anchor "
+                          f"{rel}:{line} — past end of file")
+
+
+def check_commands(md: Path, errors: list, seen: set) -> None:
+    """Every quoted command's entrypoint must still exist: ``python -m
+    repro.X`` runs with --help (argparse surface intact), quoted scripts
+    byte-compile.  Each target checked once across all pages."""
+    text = md.read_text()
+    for block in FENCE_RE.finditer(text):
+        for mod in PYMOD_RE.findall(block.group(1)):
+            if not mod.startswith("repro.") or mod in seen:
+                continue
+            seen.add(mod)
+            r = subprocess.run(
+                [sys.executable, "-m", mod, "--help"],
+                capture_output=True, text=True, timeout=120,
+                cwd=ROOT, env={**__import__("os").environ,
+                               "PYTHONPATH": str(ROOT / "src")})
+            if r.returncode != 0:
+                errors.append(
+                    f"{md.relative_to(ROOT)}: `python -m {mod} --help` "
+                    f"exited {r.returncode}: {r.stderr.strip()[:200]}")
+        for script in PYFILE_RE.findall(block.group(1)):
+            if script in seen:
+                continue
+            seen.add(script)
+            path = ROOT / script
+            if not path.exists():
+                errors.append(f"{md.relative_to(ROOT)}: quoted script "
+                              f"{script} missing")
+                continue
+            try:
+                py_compile.compile(str(path), doraise=True)
+            except py_compile.PyCompileError as e:
+                errors.append(f"{md.relative_to(ROOT)}: quoted script "
+                              f"{script} does not compile: {e}")
+
+
+def main() -> int:
+    errors: list = []
+    seen_cmds: set = set()
+    for md in DOC_FILES:
+        check_links(md, errors)
+        check_source_anchors(md, errors)
+        check_commands(md, errors, seen_cmds)
+    if errors:
+        print(f"check_docs: {len(errors)} failure(s)")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print(f"check_docs: {len(DOC_FILES)} pages OK "
+          f"({len(seen_cmds)} quoted commands verified)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
