@@ -23,6 +23,16 @@ double counting.  Three aggregators, one protocol:
     ``jax.experimental.multihost_utils.process_allgather`` (length-padded
     uint8 payloads, since allgather wants equal shapes), then merged.
 
+Aggregators also carry the DECISION side of the multi-host protocol:
+``is_leader()`` names the one process whose policy evaluates (process 0
+on a real mesh), and ``broadcast(obj)`` ships the leader's adaptation
+directive to every process — so the collective plan adoption
+(checkpoint, jit-step rebuild, live migration) is entered by ALL
+processes together or by none, never gated on per-process policy state.
+``collective`` marks aggregators whose gather/broadcast are real
+collectives: the Trainer calls those only at a step-synchronized
+cadence.
+
 ``default_aggregator()`` picks by ``jax.process_count()`` — the launch
 layer wires it through, so a multi-pod run needs no extra flags
 (ROADMAP: multi-pod telemetry aggregation).
@@ -52,17 +62,32 @@ def merge_stores(stores: Sequence[ProfileStore],
     return merged
 
 
-class LocalAggregator:
+class _LocalDecisionProtocol:
+    """Decision-protocol identity shared by the single-Python-process
+    aggregators: this process leads and ``broadcast`` is a no-op."""
+
+    collective = False
+
+    def is_leader(self) -> bool:
+        return True
+
+    def broadcast(self, obj):
+        return obj
+
+
+class LocalAggregator(_LocalDecisionProtocol):
     """Single-process identity: the local store already sees everything."""
 
     def gather(self, local: ProfileStore) -> ProfileStore:
         return local
 
 
-class InMemoryFanIn:
+class InMemoryFanIn(_LocalDecisionProtocol):
     """In-memory fan-in for CPU test meshes: every simulated process
     registers its local store; ``gather`` merges them all (the local store
-    included) into one fresh cluster view."""
+    included) into one fresh cluster view.  Runs inside ONE Python
+    process (the simulated peers never execute concurrently), hence the
+    local decision protocol."""
 
     def __init__(self, stores: Optional[Sequence[ProfileStore]] = None):
         self.stores: List[ProfileStore] = list(stores or [])
@@ -82,7 +107,15 @@ class ProcessAllGatherAggregator:
     The local store's full contents (calibration entries included) seed
     the view; only ``OBSERVED_OPS`` entries cross the wire.  Payloads are
     JSON -> uint8 arrays padded to the gathered max length (allgather
-    needs equal shapes across processes)."""
+    needs equal shapes across processes).
+
+    Decision side: process 0 leads, and ``broadcast`` ships its directive
+    as a length-prefixed JSON payload via
+    ``multihost_utils.broadcast_one_to_all`` — both are COLLECTIVES and
+    must be entered by every process at the same step (the Trainer calls
+    them only from its step-synchronized cadence point)."""
+
+    collective = True
 
     def __init__(self, ops: Sequence[str] = OBSERVED_OPS):
         self.ops = tuple(ops)
@@ -125,6 +158,36 @@ class ProcessAllGatherAggregator:
         payloads = [bytes(gathered[i, :int(lengths[i])])
                     for i in range(gathered.shape[0]) if i != me]
         return self._merge_payloads(local, payloads)
+
+    def is_leader(self) -> bool:
+        import jax
+        return jax.process_index() == 0
+
+    def broadcast(self, obj):
+        """COLLECTIVE broadcast of the leader's JSON-serializable
+        directive (None included) to every process.  Non-leaders' ``obj``
+        is ignored.  Two rounds because broadcast wants equal shapes: the
+        payload length first, then the payload itself.  The
+        single-process shortcut still round-trips through JSON, so a
+        directive behaves identically on and off the wire (a value JSON
+        would mutate or reject cannot pass single-process runs and then
+        surprise a real mesh)."""
+        import jax
+        if jax.process_count() == 1:
+            return None if obj is None else json.loads(json.dumps(obj))
+        import numpy as np
+        from jax.experimental import multihost_utils
+        payload = (json.dumps(obj).encode("utf-8")
+                   if self.is_leader() and obj is not None else b"")
+        n = int(multihost_utils.broadcast_one_to_all(
+            np.asarray([len(payload)], dtype=np.int64))[0])
+        if n == 0:
+            return None
+        buf = np.zeros(n, dtype=np.uint8)
+        if self.is_leader():
+            buf[:] = np.frombuffer(payload, dtype=np.uint8)
+        out = multihost_utils.broadcast_one_to_all(buf)
+        return json.loads(bytes(np.asarray(out)).decode("utf-8"))
 
 
 def default_aggregator():

@@ -125,6 +125,32 @@ class ParallelPlan:
                 out[c * pp + i] = base + (1 if c < rem else 0)
         return tuple(out)
 
+    def to_dict(self) -> dict:
+        """JSON-serializable form (the adaptation controller broadcasts
+        the searched plan to every process before a collective adoption).
+        ``from_dict`` round-trips it to an ``==``-equal plan."""
+        return {"stages": [dataclasses.asdict(s) for s in self.stages],
+                "micro_bs": self.micro_bs,
+                "global_batch": self.global_batch,
+                "seq_len": self.seq_len, "transport": self.transport,
+                "schedule": self.schedule, "eager_slack": self.eager_slack,
+                "vpp": self.vpp,
+                "chunk_layers": (list(self.chunk_layers)
+                                 if self.chunk_layers is not None else None)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ParallelPlan":
+        return cls(stages=tuple(StagePlacement(**s) for s in d["stages"]),
+                   micro_bs=d["micro_bs"],
+                   global_batch=d["global_batch"], seq_len=d["seq_len"],
+                   transport=d.get("transport", "gpu"),
+                   schedule=d.get("schedule", "1f1b"),
+                   eager_slack=d.get("eager_slack", 2),
+                   vpp=d.get("vpp", 1),
+                   chunk_layers=(tuple(d["chunk_layers"])
+                                 if d.get("chunk_layers") is not None
+                                 else None))
+
     def describe(self) -> str:
         seg = "".join(str(s.n_layers) for s in self.stages) \
             if max(self.layers) < 10 else "-".join(map(str, self.layers))

@@ -75,17 +75,20 @@ class PlannerResult:
     log: Tuple[Tuple[str, float], ...]  # (plan description, iter_time)
     pruned: int = 0   # candidates skipped by the lower-bound cutoff
     # incumbent's (``baseline_plan``) predicted iter_time under the SAME
-    # cost source as the winner, when one was scored — the expected-gain
-    # accounting a replan policy gates migrations on (migrations aren't
-    # free, so the winner must beat the incumbent by a margin)
+    # cost source as the winner, when one was scored AND adoptable (an
+    # incumbent failing require_fit records no baseline: nothing to stay
+    # put on) — the expected-gain accounting a replan policy gates
+    # migrations on (migrations aren't free, so the winner must beat the
+    # incumbent by a margin)
     baseline_time: Optional[float] = None
 
     @property
     def expected_gain(self) -> Optional[float]:
         """Predicted fractional iter-time improvement of the winning plan
         over the scored incumbent: ``1 - winner/incumbent``.  None when no
-        incumbent was scored (fresh search, or the baseline no longer maps
-        onto the cluster); <= 0 means the search predicts staying put is
+        adoptable incumbent was scored (fresh search, the baseline no
+        longer maps onto the cluster, or it fails require_fit); <= 0
+        means the search predicts staying put is
         at least as fast (the winner IS the incumbent, or ties it)."""
         if self.baseline_time is None or self.baseline_time <= 0.0:
             return None
@@ -360,9 +363,14 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
             p = None   # incumbent doesn't map onto this cluster anymore
         if p is not None:
             evaluated += 1
-            baseline_time = p.iter_time
             log.append((f"baseline {baseline_plan.describe()}", p.iter_time))
+            # an incumbent that fails require_fit is not a plan anyone can
+            # stay on: score it for the log, but record no baseline_time —
+            # expected_gain stays None and the min-gain gate passes (there
+            # is nothing to stay put on), instead of an infeasible
+            # incumbent's time blocking the migration away from itself
             if not (require_fit and not p.fits):
+                baseline_time = p.iter_time
                 best = (p, baseline_plan)   # also seeds the pruning cutoff
     for lb, tag, micro_bs, vpp, chunk_layers, stages, timings in cands:
         if best is not None and lb >= best[0].iter_time:

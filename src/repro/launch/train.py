@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import time
 
 import jax
@@ -33,6 +34,30 @@ import jax
 from repro.models import registry
 from repro.optim.adamw import AdamWConfig
 from repro.train.trainer import Trainer, TrainerConfig
+
+
+def degrade_spec(text: str):
+    """Validated ``--degrade`` value: KIND:FACTOR[@STEP] -> (kind, factor,
+    step or None).  A malformed spec fails at the flag with the expected
+    shape spelled out, not deep in the run with a bare ValueError."""
+    err = argparse.ArgumentTypeError(
+        f"expected KIND:FACTOR[@STEP] (e.g. gpu-a:8@6), got {text!r}")
+    spec, _, at = text.partition("@")
+    kind, sep, factor_s = spec.partition(":")
+    if not kind or not sep:
+        raise err
+    try:
+        factor = float(factor_s)
+        step = int(at) if at else None
+    except ValueError:
+        raise err from None
+    if not (factor > 0 and math.isfinite(factor)):
+        raise argparse.ArgumentTypeError(
+            f"degrade FACTOR must be a finite number > 0, got {factor_s!r}")
+    if step is not None and step < 0:
+        raise argparse.ArgumentTypeError(
+            f"degrade @STEP must be >= 0, got {at!r}")
+    return kind, factor, step
 
 
 def main():
@@ -56,7 +81,7 @@ def main():
                          "online stage telemetry (0 = plain DP step)")
     ap.add_argument("--telemetry", default="auto",
                     choices=["auto", "callback", "timer", "off"])
-    ap.add_argument("--degrade", default="",
+    ap.add_argument("--degrade", type=degrade_spec, default=None,
                     help="KIND:FACTOR[@STEP] straggler injection (default "
                          "STEP: half the steps) -> live replan + migration "
                          "(needs --pp); with --adapt the injection only "
@@ -119,11 +144,10 @@ def main():
         # searches against observed (scaled) costs once dense enough
         store = ProfileStore()
     degrade_kind, degrade_factor, degrade_step = None, 1.0, None
-    if args.degrade:
-        spec, _, at = args.degrade.partition("@")
-        kind, _, factor = spec.partition(":")
-        degrade_kind, degrade_factor = kind, float(factor)
-        degrade_step = int(at) if at else args.steps // 2
+    if args.degrade is not None:
+        degrade_kind, degrade_factor, degrade_step = args.degrade
+        if degrade_step is None:
+            degrade_step = args.steps // 2
     policy = aggregator = None
     adapt_kw = {}
     if args.adapt:
@@ -168,16 +192,17 @@ def main():
                 # autonomous path: only distort the telemetry — the
                 # controller detects, replans, gain-gates and migrates
                 t.inject_degrade(degrade_kind, degrade_factor)
-                print(f"[train] injected degrade {degrade_kind}"
-                      f"x{degrade_factor} at step {t.step} — controller "
+                print(f"[train] injected degrade {degrade_kind}:"
+                      f"{degrade_factor} at step {t.step} — controller "
                       f"is on its own now")
             else:
                 degraded = t.cluster.degrade(degrade_kind, degrade_factor)
                 res = t.replan(degraded, global_batch=args.global_batch,
                                seq_len=args.seq, **search_kw)
                 plan = res.plan
-                print(f"[train] degraded {args.degrade} -> replanned: "
-                      f"{plan.describe()} (migrations={t.migrations})")
+                print(f"[train] degraded {degrade_kind}:{degrade_factor} "
+                      f"-> replanned: {plan.describe()} "
+                      f"(migrations={t.migrations})")
             degrade_kind = None
         for ev in t.adapt_log[printed_events:]:
             print(ev.format())

@@ -23,10 +23,13 @@ Trainer's online telemetry):
 (profile a small sample of one device type, predict a cluster of them —
 the paper's methodology).  ``time_scale`` multiplies profile-served
 COMPUTE times for a queried device name (applied before the device_map
-translation): the replan path uses it to project a degraded cluster onto
-healthy observations — "we measured X on that kind; it now runs
-``factor``x slower" (``ClusterSpec.degrade``).  The analytic fallback is
-never scaled: it already reads the degraded spec's effective TFLOPs.
+translation): the replan path uses it to project a target cluster's
+degradation onto the observations — "that kind now runs ``factor``x
+slower than the healthy reference" (``ClusterSpec.degrade``).  Telemetry
+entries are first normalized back to reference health by their folded
+``obs_scale`` (the slowdown they were observed under), so a degradation
+the folds already contain is never counted twice.  The analytic fallback
+is never scaled: it already reads the degraded spec's effective TFLOPs.
 """
 from __future__ import annotations
 
@@ -148,11 +151,15 @@ class ProfiledCostModel:
         # the ratio the analytic model and the microbench runner both use —
         # so replan searches run on observed reality before a dedicated
         # sweep exists.
-        per_seq = self._interp(dev, "observed_layer_step",
-                               {"arch": cfg.name, "seq_len": seq_len,
-                                "tp": tp}, "per_seq_s")
+        shape_ls = {"arch": cfg.name, "seq_len": seq_len, "tp": tp}
+        per_seq = self._interp(dev, "observed_layer_step", shape_ls,
+                               "per_seq_s")
         if per_seq is not None:
-            step = per_seq * micro_bs
+            # normalize by the health the folds were observed under (see
+            # stage_tick_per_layer) before applying the target scale
+            osc = self.store.interpolate(dev, "observed_layer_step",
+                                         shape_ls, "obs_scale")
+            step = per_seq / max(osc or 1.0, 1e-12) * micro_bs
             return sc * step / 3.0, sc * 2.0 * step / 3.0
         return self.fallback.layer_time(device_kind, cfg, seq_len,
                                         micro_bs, tp)
@@ -167,8 +174,16 @@ class ProfiledCostModel:
         Entries folded by timer-mode telemetry (``provenance: bucketed``)
         are down-weighted by ``BUCKETED_WEIGHT``: they bucket whole steps
         and carry no per-stage skew, so an exact callback observation must
-        dominate them.  Returns None when no telemetry exists for the pair
-        (the caller falls down the serving hierarchy)."""
+        dominate them.
+
+        Serves the REFERENCE-HEALTHY time: each entry's tick mean is
+        divided by its folded ``obs_scale`` (the slowdown — injected or
+        real — the observations were taken under; repro.telemetry
+        fold_into), so ``time_scale`` can project a target cluster's
+        degradation onto it exactly once — never compounding with a
+        slowdown already baked into the folds.  Returns None when no
+        telemetry exists for the pair (the caller falls down the serving
+        hierarchy)."""
         num = den = 0.0
         for e in self.store.entries(dev, "observed_stage_tick"):
             s = e.shape
@@ -182,7 +197,9 @@ class ProfiledCostModel:
             n = e.value.get("n", 1.0)
             if e.meta.get("provenance") == "bucketed":
                 n *= BUCKETED_WEIGHT
-            num += n * e.value["tick_s"] / (depth * mbs)
+            healthy = e.value["tick_s"] / max(e.value.get("obs_scale", 1.0),
+                                              1e-12)
+            num += n * healthy / (depth * mbs)
             den += n
         if den <= 0.0:
             self.misses += 1

@@ -25,6 +25,15 @@ from typing import Any, Dict, List, Optional
 
 SCHEMA_VERSION = 1
 
+# Fields with a NEUTRAL per-observation default: when a fold or merge
+# brings such a field to an entry whose history predates it (a store
+# persisted before the field existed), the missing history counts at this
+# value instead of inheriting the incoming one — the new observation must
+# not retroactively re-tag the old ones.  ``obs_scale``: untagged
+# observations are reference-healthy (1.0), which is also exactly how
+# readers interpret its absence.
+NEUTRAL_FIELDS = {"obs_scale": 1.0}
+
 PROFILE_DIR = (Path(__file__).resolve().parents[3]
                / "benchmarks" / "artifacts" / "profiles")
 
@@ -126,16 +135,35 @@ class ProfileStore:
         return e
 
     def fold(self, device_kind: str, op: str, shape: Dict[str, Any],
-             field: str, measured: float, weight: float = 1.0) -> Entry:
+             field: str, measured: float, weight: float = 1.0,
+             also: Optional[Dict[str, float]] = None) -> Entry:
         """Online refinement: fold one observation into the stored value as
-        a weighted running mean (value keeps an ``n`` observation count)."""
+        a weighted running mean (value keeps an ``n`` observation count).
+        ``also`` folds extra fields belonging to the SAME observation —
+        one ``n`` bump covers the whole record, so paired fields (e.g. a
+        tick time and the ``obs_scale`` health it was measured under) stay
+        aligned under folding and ``merge``.  A field missing from the
+        existing entry back-fills its prior history at its
+        ``NEUTRAL_FIELDS`` default when it has one (else at the incoming
+        value), so folding into a pre-field legacy entry never re-tags
+        the old observations."""
+        fields = {field: measured, **(also or {})}
         e = self.get(device_kind, op, shape)
         if e is None:
             return self.put(device_kind, op, shape,
-                            {field: measured, "n": weight})
+                            {**fields, "n": weight})
         n = e.value.get("n", 1.0)
-        prev = e.value.get(field, measured)
-        e.value[field] = (prev * n + measured * weight) / (n + weight)
+        # both directions: a neutral field the entry carries but the
+        # incoming observation omits folds at neutral too (the incoming
+        # observation must not inherit the entry's scale)
+        for f, neutral in NEUTRAL_FIELDS.items():
+            if f in e.value and f not in fields:
+                fields[f] = neutral
+        for f, v in fields.items():
+            prev = e.value.get(f)
+            if prev is None:
+                prev = NEUTRAL_FIELDS.get(f, v)
+            e.value[f] = (prev * n + v * weight) / (n + weight)
         e.value["n"] = n + weight
         e.meta.update(default_meta())
         return e
@@ -166,13 +194,23 @@ class ProfileStore:
                 continue
             na = mine.value.get("n", 1.0)
             nb = e.value.get("n", 1.0)
-            for f, v in e.value.items():
+            # neutral back-fill runs BOTH ways — whichever side's history
+            # predates the field counts at neutral, so the merge stays
+            # order-independent and never re-tags old observations
+            incoming = dict(e.value)
+            for f, neutral in NEUTRAL_FIELDS.items():
+                if f in mine.value and f not in incoming:
+                    incoming[f] = neutral
+            for f, v in incoming.items():
                 if f == "n":
                     continue
-                if f in mine.value:
-                    mine.value[f] = (mine.value[f] * na + v * nb) / (na + nb)
-                else:
-                    mine.value[f] = v
+                mv = mine.value.get(f)
+                if mv is None:
+                    mv = NEUTRAL_FIELDS.get(f)
+                    if mv is None:
+                        mine.value[f] = v
+                        continue
+                mine.value[f] = (mv * na + v * nb) / (na + nb)
             if "n" in mine.value or "n" in e.value:
                 mine.value["n"] = na + nb
             if e.meta.get("provenance") == "bucketed":

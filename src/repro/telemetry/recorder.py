@@ -39,7 +39,11 @@ entry kinds:
       summed), folded as a running mean under the device kind hosting the
       stage.  ``padded_layers`` is the layer depth the slot actually
       computes (masked padding included) — per-layer normalization must
-      divide by it, not by the real ``layers``;
+      divide by it, not by the real ``layers``.  The value also carries
+      ``obs_scale``: the n-weighted mean slowdown the folds were observed
+      under (injected and/or real degradation; 1.0 = healthy), so readers
+      can recover reference-healthy times and never double-count a
+      degradation the observations already contain;
   observed_bubble      {arch, schedule, pp, vpp, m} -> bubble_frac
       observed pipeline bubble: 1 - activity-weighted busy share over the
       measured tick times, folded under every participating device kind.
@@ -200,7 +204,8 @@ class StageTelemetry:
                   layers_per_vstage: Sequence[int],
                   padded_per_stage: Sequence[int],
                   micro_bs_per_stage: Sequence[int],
-                  stage_scale: Optional[Sequence[float]] = None) -> int:
+                  stage_scale: Optional[Sequence[float]] = None,
+                  stage_obs_scale: Optional[Sequence[float]] = None) -> int:
         """Fold every not-yet-folded step observation into ``store`` as
         ``observed_stage_tick`` / ``observed_bubble`` running means.
         ``device_kinds`` names the device kind hosting each PHYSICAL
@@ -209,8 +214,18 @@ class StageTelemetry:
         physical stage's tick time before folding — the straggler
         *injection* hook (Trainer.inject_degrade): on a serial CPU mesh a
         degraded device cannot actually slow down, so the injection makes
-        the telemetry report what that hardware would.  Returns the number
-        of steps folded."""
+        the telemetry report what that hardware would.
+
+        ``stage_obs_scale`` records the total slowdown each stage's fold
+        was OBSERVED under, relative to the healthy reference (injection
+        and/or genuinely degraded hardware; default: ``stage_scale``, the
+        injected part, else 1.0).  It folds n-weighted as ``obs_scale``
+        next to ``tick_s``, so a reader dividing the two means recovers
+        the reference-healthy tick time exactly — the replan cost source
+        uses that to apply a target cluster's degradation exactly once
+        instead of compounding it with a slowdown the observations
+        already contain (ProfiledCostModel.stage_tick_per_layer).
+        Returns the number of steps folded."""
         folded = 0
         meta_extra = {"telemetry": self.mode,
                       "provenance": ("bucketed" if self.mode == "timer"
@@ -223,6 +238,10 @@ class StageTelemetry:
                              for ch in range(self.vpp))
                 if stage_scale is not None:
                     tick_s *= stage_scale[i]
+                obs_sc = (stage_obs_scale[i]
+                          if stage_obs_scale is not None
+                          else (stage_scale[i] if stage_scale is not None
+                                else 1.0))
                 layers = sum(layers_per_vstage[ch * self.pp + i]
                              for ch in range(self.vpp))
                 e = store.fold(
@@ -232,7 +251,7 @@ class StageTelemetry:
                      "vpp": self.vpp, "layers": layers,
                      "padded_layers": padded_per_stage[i],
                      "micro_bs": micro_bs_per_stage[i]},
-                    "tick_s", tick_s)
+                    "tick_s", tick_s, also={"obs_scale": float(obs_sc)})
                 e.meta.update(meta_extra)
             for dev in dict.fromkeys(device_kinds):
                 e = store.fold(

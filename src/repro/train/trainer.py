@@ -26,7 +26,11 @@
     recording every decision in ``adapt_log`` (structured AdaptEvents;
     docs/adaptation.md).  A ``repro.adapt`` aggregator gathers every
     process's telemetry folds into one per-island profile before the
-    policy evaluates, so multi-pod runs adapt on the cluster view.
+    policy evaluates, and makes the DECISION cluster-symmetric: the
+    leader process (aggregator.is_leader) evaluates policy + search on
+    the gathered view and broadcasts the resulting directive, so every
+    process enters the collective adoption together or not at all —
+    per-process policy state never gates a collective.
 """
 from __future__ import annotations
 
@@ -67,17 +71,25 @@ class TrainerConfig:
     # profile)
     replan_profile_min_obs: float = 8.0
     # with a policy + aggregator attached, gather the cluster-wide
-    # telemetry view every this many steps.  The gather happens at a
-    # step-synchronized point of run() — EVERY process executes it at the
-    # same step — because a collective aggregator (process_allgather)
-    # invoked from a data-dependent branch would deadlock processes whose
-    # local policy state diverged.  Raise it when per-step allgathers are
-    # too chatty for the fabric.
+    # telemetry view — and run the adaptation decision + its broadcast —
+    # every this many steps.  Both happen at a step-synchronized point of
+    # run() — EVERY process executes them at the same step — because a
+    # collective (process_allgather, the directive broadcast) invoked
+    # from a data-dependent branch would deadlock processes whose local
+    # policy state diverged.  Raise it when per-step collectives are too
+    # chatty for the fabric.
     aggregate_every: int = 1
     # stage telemetry mode for the pipeline step: "auto" picks per-tick
     # host callbacks on CPU backends and cheap step-bucketed timers
     # elsewhere; "off" disables recording entirely
     telemetry: str = "auto"
+
+
+@dataclasses.dataclass(frozen=True)
+class _AdoptedPlan:
+    """Minimal ``_adopt`` argument for a plan that arrived through a
+    broadcast adaptation directive rather than a local PlannerResult."""
+    plan: ParallelPlan
 
 
 class Trainer:
@@ -104,7 +116,18 @@ class Trainer:
         self._adapt_seen = 0             # telemetry steps already shown
         self._inject_scale: Dict[str, float] = {}
         self._cluster_view = None        # cached aggregator.gather result
+        self._store_tick_state = None    # (n, n·mean) sums per stage at
+        #                                  the last policy look (delta
+        #                                  basis for _store_stage_ticks)
         self._pred_bubble = None         # (plan, cluster, bubble) cache
+        # the HEALTHY reference per device kind: telemetry folds are
+        # tagged with their slowdown relative to it (obs_scale) and replan
+        # cost sources project target degradations against it — never
+        # against the already-degraded incumbent (which would double-count
+        # slowdowns the observations contain)
+        self._ref_tflops: Dict[str, float] = (
+            {g.device.name: g.device.effective_tflops
+             for g in cluster.groups} if cluster is not None else {})
         self.opt_cfg = opt_cfg or AdamWConfig()
         self.rules = ShardingRules(bundle.cfg, tp=cfg.tp,
                                    dp_axes=("data",))
@@ -279,17 +302,21 @@ class Trainer:
                         on_straggler(self)
             # --- autonomous adaptation (repro.adapt closed loop) ---
             if self.policy is not None:
-                # the gather runs HERE, unconditionally on a step cadence:
-                # self.step is identical across SPMD processes, so a
-                # collective aggregator is entered by everyone together
-                # (policy/telemetry state may diverge per process and must
-                # never gate a collective)
+                # BOTH collectives of the loop — the telemetry gather and
+                # the decision broadcast inside _maybe_adapt — run HERE,
+                # unconditionally on a step cadence: self.step is
+                # identical across SPMD processes, so every process
+                # enters them together (policy/telemetry state may
+                # diverge per process and must never gate a collective)
+                on_cadence = (self.step
+                              % max(1, self.cfg.aggregate_every) == 0)
                 if self.aggregator is not None and \
-                        self.profile_store is not None and \
-                        self.step % max(1, self.cfg.aggregate_every) == 0:
+                        self.profile_store is not None and on_cadence:
                     self._cluster_view = self.aggregator.gather(
                         self.profile_store)
-                self._maybe_adapt()
+                if on_cadence or \
+                        not getattr(self.aggregator, "collective", False):
+                    self._maybe_adapt()
             if self.step % self.cfg.ckpt_every == 0:
                 self.ckpt.save_async(self.step, self.state,
                                      extra=self._ckpt_extra())
@@ -318,13 +345,16 @@ class Trainer:
         self.profile_store.fold(dev, "observed_step", shape, "time_s", dt)
         # per-layer per-SEQUENCE time: a whole-step observation cannot
         # separate microbatch sizes, so normalize by the batch and let the
-        # cost model scale linearly to the queried micro_bs
+        # cost model scale linearly to the queried micro_bs.  obs_scale
+        # tags the REAL slowdown of this host's kind only — injection
+        # distorts telemetry, never the measured wall time
         self.profile_store.fold(
             dev, "observed_layer_step",
             {"arch": cfgm.name, "seq_len": self.cfg.seq_len,
              "tp": self.cfg.tp},
             "per_seq_s", dt / (max(cfgm.num_layers, 1)
-                               * self.cfg.global_batch))
+                               * self.cfg.global_batch),
+            also={"obs_scale": self._model_scale(dev)})
         if self.telemetry is not None:
             self.telemetry.observe_step(dt)    # no-op in callback mode
             self._fold_telemetry(dev)
@@ -337,6 +367,7 @@ class Trainer:
         plan = self.plan
         vl = list(plan.virtual_layers)
         lmax = max(vl)
+        obs = self._obs_scales()
         self.telemetry.fold_into(
             self.profile_store, [dev] * plan.pp,
             arch=self.bundle.cfg.name, seq_len=self.cfg.seq_len,
@@ -346,7 +377,11 @@ class Trainer:
             micro_bs_per_stage=[plan.stage_micro_bs(i)
                                 for i in range(plan.pp)],
             stage_scale=(self._stage_scales()
-                         if self._inject_scale else None))
+                         if self._inject_scale else None),
+            stage_obs_scale=(
+                [obs.get(self.cluster.groups[st.group].device.name, 1.0)
+                 for st in plan.stages]
+                if self.cluster is not None else None))
 
     # ------------------------------------ autonomous adaptation (adapt) ---
     def inject_degrade(self, device_kind: str, factor: float) -> None:
@@ -378,6 +413,37 @@ class Trainer:
             self.cluster.groups[st.group].device.name, 1.0)
             for st in self.plan.stages]
 
+    def _model_scale(self, kind: str) -> float:
+        """Slowdown of ``kind`` the CURRENT cluster spec models, relative
+        to the healthy reference (1.0 when healthy or not a cluster
+        kind)."""
+        if self.cluster is None:
+            return 1.0
+        for g in self.cluster.groups:
+            if g.device.name == kind and g.device.effective_tflops > 0:
+                ref = self._ref_tflops.get(kind, g.device.effective_tflops)
+                return ref / g.device.effective_tflops
+        return 1.0
+
+    def _obs_scales(self) -> Dict[str, float]:
+        """Per-device-kind slowdown the current telemetry folds are
+        OBSERVED under, relative to the healthy reference — the
+        ``obs_scale`` tag the replan cost source later divides out.
+        Injection and an adopted cluster degradation describe the SAME
+        slowdown (the injection exists because test hardware cannot
+        actually slow down; real hardware already slows the measured
+        ticks the model then adopts), so the two are not composed: the
+        scale is whichever has caught up further."""
+        out: Dict[str, float] = {}
+        kinds = set(self._inject_scale)
+        if self.cluster is not None:
+            kinds |= {g.device.name for g in self.cluster.groups}
+        for k in kinds:
+            s = max(self._inject_scale.get(k, 1.0), self._model_scale(k))
+            if abs(s - 1.0) > 1e-12:
+                out[k] = s
+        return out
+
     def _merged_store(self):
         """The cluster-wide profile view: every process's telemetry folds
         gathered into one store (repro.adapt aggregators; identity on a
@@ -395,9 +461,15 @@ class Trainer:
         return self.aggregator.gather(self.profile_store)
 
     def _stage_tick_obs(self):
-        """Most recent per-PHYSICAL-stage forward tick seconds (each
-        stage's vpp chunks summed, injected degradation applied) — the
-        policy's straggler signal.  None before the first kept step."""
+        """Per-PHYSICAL-stage forward tick seconds (each stage's vpp
+        chunks summed, injected degradation applied) — the policy's
+        straggler signal.  Single-process: the local telemetry's most
+        recent observation.  With a multi-process (collective) aggregator
+        the ticks come from the gathered CLUSTER view instead — every
+        process's folds, covering stages this process never hosts.  None
+        before the first kept/gathered observation."""
+        if getattr(self.aggregator, "collective", False):
+            return self._store_stage_ticks()
         ticks = self.telemetry.stage_ticks() if self.telemetry else None
         if ticks is None:
             return None
@@ -406,20 +478,91 @@ class Trainer:
         return [scales[i] * sum(ticks[ch * pp + i] for ch in range(vpp))
                 for i in range(pp)]
 
+    def _store_stage_ticks(self):
+        """Per-physical-stage tick times reconstructed from the gathered
+        cluster view (``observed_stage_tick`` folds of EVERY process,
+        degradation as observed — raw, not the reference-healthy
+        normalization the cost source uses).  The store only holds
+        all-time running means, under which a fresh degradation would
+        surface ever more slowly as the run ages — so the policy is fed
+        the DELTA between consecutive evaluations: (Σn·mean)_now minus
+        (Σn·mean)_prev per stage, i.e. exactly the mean of the folds that
+        arrived since the last look (frozen entries from superseded plans
+        cancel out of the difference).  None until every stage of the
+        executing plan has fresh observations."""
+        store = self._merged_store()
+        if store is None:
+            return None
+        plan, cfgm = self.plan, self.bundle.cfg
+        sums = [0.0] * plan.pp
+        ns = [0.0] * plan.pp
+        for e in store.entries(op="observed_stage_tick"):
+            s = e.shape
+            if (s.get("arch") != cfgm.name
+                    or s.get("seq_len") != self.cfg.seq_len
+                    or s.get("tp") != self.cfg.tp
+                    or s.get("schedule") != plan.schedule
+                    or s.get("pp") != plan.pp or s.get("vpp") != plan.vpp
+                    or "tick_s" not in e.value):
+                continue
+            i = s.get("stage", -1)
+            if not 0 <= i < plan.pp:
+                continue
+            n = e.value.get("n", 1.0)
+            sums[i] += n * e.value["tick_s"]
+            ns[i] += n
+        prev = self._store_tick_state
+        self._store_tick_state = (ns, sums)
+        if prev is not None and len(prev[0]) == len(ns):
+            d_n = [a - b for a, b in zip(ns, prev[0])]
+            d_s = [a - b for a, b in zip(sums, prev[1])]
+            if all(d > 0.0 for d in d_n):
+                return [s / n for s, n in zip(d_s, d_n)]
+            return None       # no fresh folds everywhere since last look
+        if any(n <= 0.0 for n in ns):
+            return None
+        return [t / n for t, n in zip(sums, ns)]
+
     def _emit(self, event) -> None:
         self.adapt_log.append(event)
 
+    def _adapt_leader(self) -> bool:
+        """Whether THIS process runs the policy/search.  Exactly one
+        process of a multi-process run leads (the aggregator names it);
+        without an aggregator every trainer is its own leader."""
+        if self.aggregator is None:
+            return True
+        return getattr(self.aggregator, "is_leader", lambda: True)()
+
     def _maybe_adapt(self) -> None:
-        """Consult the policy on each NEW telemetry observation; when it
-        fires, search — and migrate only if the predicted gain clears the
-        policy's ε gate.  The whole decision trail lands in ``adapt_log``
-        as structured AdaptEvents."""
-        from repro.adapt import AdaptEvent
+        """One pass of the closed loop, CLUSTER-SYMMETRIC by construction:
+        the leader process consults the policy on its new telemetry (the
+        gathered cluster view on multi-process runs), searches, and
+        ε-gates; the resulting directive — or None — is then BROADCAST
+        through the aggregator, and every process applies it (or skips)
+        together.  Per-process policy/hysteresis/cooldown state therefore
+        never gates the collective adoption (checkpoint, jit-step
+        rebuild, live migration): the broadcast itself is the only
+        data-independent collective, entered unconditionally at the
+        run-loop's step-synchronized cadence point."""
         if self.telemetry is None or not self._pipeline_active() \
                 or self.cluster is None:
             return       # nothing to replan against without a cluster
+        directive = self._adapt_decide() if self._adapt_leader() else None
+        if self.aggregator is not None:
+            directive = self.aggregator.broadcast(directive)
+        if directive is not None:
+            self._adapt_apply(directive)
+
+    def _adapt_decide(self) -> Optional[Dict[str, Any]]:
+        """LEADER ONLY: consult the policy on each NEW telemetry
+        observation; when it fires, search — and return an adoption
+        directive only if the predicted gain clears the policy's ε gate.
+        The whole decision trail lands in ``adapt_log`` as structured
+        AdaptEvents."""
+        from repro.adapt import AdaptEvent
         if self.telemetry.steps <= self._adapt_seen:
-            return                        # no new observation this step
+            return None                   # no new observation this step
         self._adapt_seen = self.telemetry.steps
         health = self.schedule_health()
         decision = self.policy.observe(
@@ -428,7 +571,7 @@ class Trainer:
             provenance=("bucketed" if self.telemetry.mode == "timer"
                         else "exact"))
         if decision is None:
-            return
+            return None
         self._emit(AdaptEvent(
             self.step, "trigger", decision.reason,
             {"action": decision.action,
@@ -436,13 +579,15 @@ class Trainer:
              **({"stage": decision.stage,
                  "factor": decision.factor}
                 if decision.stage is not None else {})}))
-        if decision.action == "replan-straggler" and self.cluster is not None:
+        if decision.action == "replan-straggler":
             kind = self.cluster.groups[
                 self.plan.stages[decision.stage].group].device.name
-            new_cluster = self.cluster.degrade(kind, decision.factor)
+            factor = decision.factor
+            new_cluster = self.cluster.degrade(kind, factor)
         else:
             # wrong-schedule signal: same cluster, re-score the schedule
             # sweep against the observed profile
+            kind = factor = None
             new_cluster = self.cluster
         try:
             result = self.plan_for(
@@ -455,7 +600,7 @@ class Trainer:
             self.policy.reject(self.step)
             self._emit(AdaptEvent(self.step, "skip",
                                   f"search failed: {e}", {}))
-            return
+            return None
         gain = result.expected_gain
         self._emit(AdaptEvent(
             self.step, "replan", f"searched {result.evaluated} candidates",
@@ -472,13 +617,28 @@ class Trainer:
                 f"{self.policy.cfg.min_gain} — migration not worth it",
                 {"expected_gain": round(gain, 4),
                  "min_gain": self.policy.cfg.min_gain}))
-            return
-        self._adopt(result, new_cluster, migrate="memory")
+            return None
+        # JSON-serializable directive: what every process must adopt
+        return {"kind": kind, "factor": factor,
+                "plan": result.plan.to_dict()}
+
+    def _adapt_apply(self, directive: Dict[str, Any]) -> None:
+        """EVERY process (leader and followers alike): commit a broadcast
+        directive — rebuild the degraded cluster from (kind, factor),
+        deserialize the leader's searched plan, and enter the collective
+        adoption together."""
+        from repro.adapt import AdaptEvent
+        plan = ParallelPlan.from_dict(directive["plan"])
+        new_cluster = (self.cluster.degrade(directive["kind"],
+                                            directive["factor"])
+                       if directive.get("kind") else self.cluster)
+        self._adopt(_AdoptedPlan(plan), new_cluster, migrate="memory")
         self.policy.reset(self.step)
         self._adapt_seen = 0
+        self._store_tick_state = None    # new plan: fresh delta basis
         self._emit(AdaptEvent(
             self.step, "migrate", "adopted the searched plan live",
-            {"plan": result.plan.describe(),
+            {"plan": plan.describe(),
              "migrations": dict(self.migrations)}))
 
     # ----------------------------------------------- schedule diagnostics --
@@ -517,20 +677,22 @@ class Trainer:
 
     # --------------------------------------------- replan cost sourcing ---
     def _degrade_scales(self, new_cluster: ClusterSpec) -> Dict[str, float]:
-        """Per-device-name time scales projecting observed (healthy) times
-        onto the new cluster: a kind whose effective TFLOPs dropped by f
-        serves its observations f-times slower (ClusterSpec.degrade)."""
-        if self.cluster is None:
-            return {}
-        old = {g.device.name: g.device.effective_tflops
-               for g in self.cluster.groups}
+        """Per-device-name time scales projecting the profile's
+        REFERENCE-HEALTHY served times onto the new cluster: a kind whose
+        effective TFLOPs sits f-times below the healthy reference
+        (``_ref_tflops``, the construction-time cluster) serves its
+        observations f-times slower.  Telemetry folds are normalized back
+        to reference health by their ``obs_scale`` tag before this scale
+        applies (ProfiledCostModel), so a slowdown the observations
+        already contain — injected or real — is counted exactly once,
+        never compounded."""
         out = {}
         for g in new_cluster.groups:
-            prev = old.get(g.device.name)
+            ref = self._ref_tflops.get(g.device.name)
             now = g.device.effective_tflops
-            if prev is not None and now > 0 and \
-                    abs(prev - now) > 1e-12 * prev:
-                out[g.device.name] = prev / now
+            if ref is not None and now > 0 and \
+                    abs(ref - now) > 1e-12 * ref:
+                out[g.device.name] = ref / now
         return out
 
     def profiled_cost_source(self, cluster: ClusterSpec):
@@ -542,11 +704,14 @@ class Trainer:
         kind: the observing host stands in for the whole cluster, the
         paper's profile-a-sample-predict-the-cluster methodology (a real
         multi-island deployment folds per-island kinds instead).  Device
-        kinds the new cluster reports as degraded relative to the one the
-        observations were taken on get their served times scaled up by
-        the degradation factor.  With an aggregator attached the source
-        reads the CLUSTER-wide merged store (every process's telemetry
-        folds), not this process's 1/N view."""
+        kinds ``cluster`` reports as degraded relative to the HEALTHY
+        REFERENCE get their served times scaled by the degradation factor
+        — served times are reference-healthy (telemetry folds normalized
+        by their ``obs_scale`` tag), so the factor applies exactly once
+        however much slowdown the folds already contained.  With an
+        aggregator attached the source reads the CLUSTER-wide merged
+        store (every process's telemetry folds), not this process's 1/N
+        view."""
         store = self._merged_store()
         if store is None:
             return None
@@ -621,6 +786,13 @@ class Trainer:
         ckpt.save(self.cfg.ckpt_dir, self.step, self.state,
                   extra=self._ckpt_extra())
         self.cluster = new_cluster
+        # kinds first seen on the new cluster join the healthy reference
+        # at their current rating; kinds already referenced keep theirs
+        # (the reference is what obs_scale tags and replan projections
+        # are relative to)
+        for g in new_cluster.groups:
+            self._ref_tflops.setdefault(g.device.name,
+                                        g.device.effective_tflops)
         self.plan = result.plan
         self.replans += 1
         self._build()

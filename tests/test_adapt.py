@@ -19,7 +19,9 @@ autonomous edition):
     manual degrade->replan path, and never migrating when the predicted
     gain is below ε.
 """
+import argparse
 import dataclasses
+import json
 import tempfile
 import types
 from pathlib import Path
@@ -439,6 +441,151 @@ def test_e2e_min_gain_gate_blocks_migration(tmp_path):
     assert t.plan.layers == (3, 3)                # incumbent untouched
 
 
+def test_planner_infeasible_incumbent_records_no_baseline():
+    """An incumbent that fails require_fit is scored for the log but must
+    NOT become the expected-gain baseline: gain_ok's "no scored incumbent
+    -> pass" rule applies, so the controller can always migrate OFF a
+    plan the planner itself considers infeasible."""
+    from repro.configs.llama3_8b import CONFIG
+    from repro.core.predictor import PerformancePredictor
+    cfg = dataclasses.replace(CONFIG, num_layers=6)
+    bad = ParallelPlan(stages=(StagePlacement(0, 5, 1, 1, False),
+                               StagePlacement(1, 1, 1, 1, True)),
+                       micro_bs=2, global_batch=8, seq_len=32)
+    good = ParallelPlan(stages=(StagePlacement(0, 3, 1, 1, False),
+                                StagePlacement(1, 3, 1, 1, True)),
+                        micro_bs=2, global_batch=8, seq_len=32)
+    pred = PerformancePredictor(_two_island_cluster(), cfg,
+                                include_tp_comm=False)
+    mem_bad = max(pred.predict(bad).peak_mem_gb)
+    mem_ok = max(pred.predict(good).peak_mem_gb)
+    assert mem_bad > mem_ok
+    # HBM between the two: the lopsided incumbent no longer fits, a
+    # balanced split does
+    hbm = (mem_bad + mem_ok) / 2.0
+    cl = C.ClusterSpec(groups=(
+        C.NodeGroup(dataclasses.replace(C.AMD, hbm_gb=hbm), 1,
+                    accel_per_node=1),
+        C.NodeGroup(dataclasses.replace(C.GPU_A, hbm_gb=hbm), 1,
+                    accel_per_node=1)))
+    kw = dict(SEARCH_KW)
+    kw["require_fit"] = True
+    res = planner.search(cl, cfg, baseline_plan=bad, **kw)
+    assert res.prediction.fits
+    assert res.baseline_time is None and res.expected_gain is None
+    assert ReplanPolicy().gain_ok(res)       # nothing to stay put on
+    # the infeasible incumbent was still scored into the search log
+    assert any(d.startswith("baseline ") for d, _ in res.log)
+
+
+def test_plan_dict_roundtrip():
+    """The adaptation directive ships the searched plan as JSON across
+    processes: to_dict -> (wire) -> from_dict must be ``==``-exact,
+    chunk-pinned interleaved plans included."""
+    plans = [
+        ParallelPlan(stages=(StagePlacement(0, 3, 1, 1, False),
+                             StagePlacement(1, 3, 2, 1, True)),
+                     micro_bs=2, global_batch=8, seq_len=32),
+        ParallelPlan(stages=(StagePlacement(1, 5, 1, 1, False),
+                             StagePlacement(0, 3, 1, 1, True)),
+                     micro_bs=1, global_batch=8, seq_len=64,
+                     schedule="interleaved-1f1b", vpp=2,
+                     chunk_layers=(2, 1, 3, 2)),
+    ]
+    for p in plans:
+        wired = json.loads(json.dumps(p.to_dict()))
+        assert ParallelPlan.from_dict(wired) == p
+
+
+# --------------------------- degradation projection (no double count) ------
+def test_degrade_projection_not_double_counted():
+    """Folds taken under a degradation carry their ``obs_scale``; the cost
+    model serves the REFERENCE-HEALTHY time (tick mean / obs_scale mean —
+    exact under mixed healthy+degraded folds) and ``time_scale`` then
+    applies the target slowdown exactly once, never factor^2."""
+    st = ProfileStore()
+    shape = dict(arch="m", seq_len=32, tp=1, schedule="1f1b", stage=1,
+                 pp=2, vpp=1, layers=3, padded_layers=3, micro_bs=2)
+    cfg = types.SimpleNamespace(name="m")
+    for _ in range(3):       # healthy folds: 0.6s per 3-layer 2-seq tick
+        st.fold("cpu", "observed_stage_tick", shape, "tick_s", 0.6,
+                also={"obs_scale": 1.0})
+    for _ in range(5):       # folded while the kind ran 8x slow
+        st.fold("cpu", "observed_stage_tick", shape, "tick_s", 8 * 0.6,
+                also={"obs_scale": 8.0})
+    healthy = ProfiledCostModel(st).stage_tick_per_layer("cpu", cfg, 32, 1)
+    assert healthy == pytest.approx(0.6 / (3 * 2))
+    pcm = ProfiledCostModel(st, device_map={"gpu-x": "cpu"},
+                            time_scale={"gpu-x": 8.0})
+    fwd, bwd = pcm.layer_time("gpu-x", cfg, 32, micro_bs=2, tp=1)
+    assert fwd == pytest.approx(8.0 * 0.6 / 3)       # 8x once, not 64x
+    assert bwd == pytest.approx(2.0 * fwd)
+    # obs_scale survives the multi-host fold-merge (same n-weighting)
+    merged = merge_stores([st, ProfileStore()])
+    e = merged.get("cpu", "observed_stage_tick", shape)
+    assert e.value["tick_s"] / e.value["obs_scale"] == pytest.approx(0.6)
+
+
+def test_legacy_entries_not_retagged_by_obs_scale_folds():
+    """Folding a tagged observation into a pre-obs_scale legacy entry must
+    back-fill the missing history at NEUTRAL (1.0) — not retroactively
+    attribute the new scale to all prior observations, which would serve
+    a 'reference-healthy' time far below anything ever measured."""
+    st = ProfileStore()
+    shape = {"arch": "m", "seq_len": 32, "tp": 1, "schedule": "1f1b",
+             "stage": 0, "pp": 2, "vpp": 1, "layers": 1,
+             "padded_layers": 1, "micro_bs": 1}
+    # legacy: 100 healthy observations with no obs_scale field
+    st.put("cpu", "observed_stage_tick", shape,
+           {"tick_s": 0.6, "n": 100.0})
+    st.fold("cpu", "observed_stage_tick", shape, "tick_s", 8 * 0.6,
+            also={"obs_scale": 8.0})
+    e = st.get("cpu", "observed_stage_tick", shape)
+    assert e.value["obs_scale"] == pytest.approx((100 * 1.0 + 8.0) / 101)
+    served = ProfiledCostModel(st).stage_tick_per_layer(
+        "cpu", types.SimpleNamespace(name="m"), 32, 1)
+    assert served == pytest.approx(0.6, rel=0.05)   # not 0.6/8
+    # an untagged fold into a tagged entry counts at neutral too (the
+    # observation must not inherit the entry's scale)
+    st.fold("cpu", "observed_stage_tick", shape, "tick_s", 0.6)
+    e = st.get("cpu", "observed_stage_tick", shape)
+    assert e.value["obs_scale"] == \
+        pytest.approx((100 * 1.0 + 8.0 + 1.0) / 102)
+    # merge has the same rule IN BOTH ORDERS: whichever side's history
+    # predates the field counts at neutral, never at the other's scale —
+    # which also keeps the fold-merge order-independent
+    def mk_tagged():
+        s = ProfileStore()
+        s.fold("cpu", "observed_stage_tick", shape, "tick_s", 8 * 0.6,
+               also={"obs_scale": 8.0})
+        return s
+
+    def mk_legacy():
+        s = ProfileStore()
+        s.put("cpu", "observed_stage_tick", shape,
+              {"tick_s": 0.6, "n": 100.0})
+        return s
+
+    want = (100 * 1.0 + 8.0) / 101
+    for stores in ([mk_legacy(), mk_tagged()], [mk_tagged(), mk_legacy()]):
+        m = merge_stores(stores).get("cpu", "observed_stage_tick", shape)
+        assert m.value["obs_scale"] == pytest.approx(want)
+        assert m.value["n"] == 101.0
+
+
+def test_degrade_flag_validation():
+    """--degrade rejects malformed specs at the flag with the expected
+    shape, instead of a bare ValueError mid-run."""
+    from repro.launch.train import degrade_spec
+    assert degrade_spec("gpu-a:8") == ("gpu-a", 8.0, None)
+    assert degrade_spec("gpu-a:2.5@6") == ("gpu-a", 2.5, 6)
+    for bad in ("gpu-a", "gpu-a:", ":8", "gpu-a:x", "gpu-a:8@x",
+                "gpu-a:0", "gpu-a:-2", "gpu-a:nan", "gpu-a:inf",
+                "gpu-a:8@-3"):
+        with pytest.raises(argparse.ArgumentTypeError):
+            degrade_spec(bad)
+
+
 def test_trainer_cost_source_reads_aggregated_view(tmp_path):
     """With an aggregator attached, the replan cost source opens its
     density gate on the CLUSTER-wide observation count — remote folds
@@ -461,3 +608,84 @@ def test_trainer_cost_source_reads_aggregated_view(tmp_path):
     assert isinstance(src, ProfiledCostModel)     # gate opened by peers
     t.aggregator = None
     assert t.profiled_cost_source(cl) is None     # 1/N view: too sparse
+
+
+# ----------------------- cluster-symmetric decision (leader + broadcast) ---
+class _ScriptedAggregator:
+    """Collective-aggregator stand-in runnable in ONE process: gather is
+    the identity, and ``broadcast`` records the directive stream (leader)
+    or replays a recorded one (follower) — what
+    ``ProcessAllGatherAggregator`` does over the wire, minus the wire."""
+    collective = True
+
+    def __init__(self, leader=True, replay=None):
+        self.leader = leader
+        self.sent = []                   # leader: one entry per broadcast
+        self.replay = list(replay or [])
+
+    def gather(self, local):
+        return local
+
+    def is_leader(self):
+        return self.leader
+
+    def broadcast(self, obj):
+        if self.leader:
+            self.sent.append(obj)
+            return obj
+        assert obj is None               # a follower never decides
+        return self.replay.pop(0) if self.replay else None
+
+
+def test_decision_is_cluster_symmetric_via_broadcast():
+    """The adaptation decision must never be gated on per-process policy
+    state: the LEADER decides (from the gathered cluster view) and its
+    directive is broadcast, so a process that observed nothing anomalous
+    locally still enters the collective adoption at the same step — same
+    plan, same degraded cluster, bit-exact final state."""
+    # leader: sees the injected telemetry skew, decides, broadcasts
+    policy = ReplanPolicy(_cfg(patience=2, cooldown=4, baseline_steps=2,
+                               ewma=1.0, min_gain=0.0))
+    lead_agg = _ScriptedAggregator(leader=True)
+    t = _mk_trainer(tempfile.mkdtemp(), policy=policy, aggregator=lead_agg)
+    t.run(4)
+    t.inject_degrade("gpu-a", 8.0)
+    t.run(6)
+    assert t.replans == 1 and t.migrations["memory"] == 1
+    directives = [d for d in lead_agg.sent if d is not None]
+    assert len(directives) == 1
+    assert directives[0]["kind"] == "gpu-a"
+    # every _maybe_adapt pass broadcast (None included): the collective
+    # is entered unconditionally, never gated on policy state
+    assert len(lead_agg.sent) == 10
+    # follower: NO local anomaly (no injection), policy never consulted —
+    # it replays the leader's directive stream (JSON round-tripped, as
+    # the wire would deliver it) at the same per-step cadence
+    follow_agg = _ScriptedAggregator(
+        leader=False, replay=json.loads(json.dumps(lead_agg.sent)))
+    m = _mk_trainer(tempfile.mkdtemp(),
+                    policy=ReplanPolicy(_cfg(patience=2, cooldown=4,
+                                             baseline_steps=2, ewma=1.0,
+                                             min_gain=0.0)),
+                    aggregator=follow_agg)
+    m.run(10)
+    assert not follow_agg.replay                  # consumed in lockstep
+    assert m.replans == 1 and m.migrations["memory"] == 1
+    assert m.plan == t.plan                       # identical adoption...
+    assert [e.action for e in m.adapt_log] == ["migrate"]
+    sc = {g.device.name: g.device.effective_tflops
+          for g in m.cluster.groups}
+    assert sc == {g.device.name: g.device.effective_tflops
+                  for g in t.cluster.groups}      # ...identical cluster...
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)),
+        jax.device_get(t.state), jax.device_get(m.state))  # ...same state
+    # the leader's reference-based projection: after adopting the
+    # degraded cluster the served-time scale is still the FULL factor vs
+    # the healthy reference, not 1.0 vs the already-degraded incumbent
+    trig = next(e for e in t.adapt_log if e.action == "trigger")
+    assert t._degrade_scales(t.cluster)["gpu-a"] == \
+        pytest.approx(trig.detail["factor"])
+    # and the folds carry their observation-time health tag
+    assert any(e.value.get("obs_scale", 1.0) > 1.0
+               for e in t.profile_store.entries(op="observed_stage_tick"))

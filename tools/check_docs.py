@@ -92,11 +92,18 @@ def check_commands(md: Path, errors: list, seen: set) -> None:
             if not mod.startswith("repro.") or mod in seen:
                 continue
             seen.add(mod)
-            r = subprocess.run(
-                [sys.executable, "-m", mod, "--help"],
-                capture_output=True, text=True, timeout=120,
-                cwd=ROOT, env={**__import__("os").environ,
-                               "PYTHONPATH": str(ROOT / "src")})
+            try:
+                r = subprocess.run(
+                    [sys.executable, "-m", mod, "--help"],
+                    capture_output=True, text=True, timeout=120,
+                    cwd=ROOT, env={**__import__("os").environ,
+                                   "PYTHONPATH": str(ROOT / "src")})
+            except subprocess.TimeoutExpired:
+                # a hanging entrypoint is a docs failure to report, not a
+                # traceback that kills the whole CI job
+                errors.append(f"{md.relative_to(ROOT)}: `python -m {mod} "
+                              f"--help` timed out after 120s")
+                continue
             if r.returncode != 0:
                 errors.append(
                     f"{md.relative_to(ROOT)}: `python -m {mod} --help` "
