@@ -32,6 +32,10 @@ def main():
     ap.add_argument("--ckpt-dir", default="",
                     help="checkpoint dir (default: fresh temp dir — a "
                          "stale checkpoint would resume a previous demo)")
+    ap.add_argument("--obs-dir", default="",
+                    help="also export the full observability bundle "
+                         "(trace.json / metrics.jsonl / events.jsonl / "
+                         "prom.txt — docs/observability.md) to this dir")
     args = ap.parse_args()
     ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="repro_autopilot_")
 
@@ -44,6 +48,11 @@ def main():
                 "--adapt-enter", "3.0", "--adapt-patience", "3",
                 "--degrade", args.degrade, "--log-every", "4",
                 "--ckpt-dir", ckpt_dir, "--ckpt-every", "1000"]
+    if args.obs_dir:
+        sys.argv += ["--trace-out", f"{args.obs_dir}/trace.json",
+                     "--metrics-out", f"{args.obs_dir}/metrics.jsonl",
+                     "--events-out", f"{args.obs_dir}/events.jsonl",
+                     "--prom-out", f"{args.obs_dir}/prom.txt"]
     print("[autopilot] " + " ".join(sys.argv[1:]))
     launch_train.main()
 

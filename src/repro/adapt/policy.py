@@ -140,6 +140,20 @@ def events_json(events: Sequence[AdaptEvent]) -> str:
     return json.dumps([e.to_dict() for e in events], indent=1)
 
 
+def events_jsonl(events: Sequence[AdaptEvent], run=None) -> str:
+    """The AdaptEvent log as JSONL: a run-identity header line (when a
+    ``repro.obs.runmeta.RunMeta`` is given) followed by one
+    ``{"kind": "adapt_event", ...to_dict()}`` object per line — the
+    ``--events-out`` artifact format (append-friendly, streamable,
+    attributable in multi-run artifact directories)."""
+    lines = []
+    if run is not None:
+        lines.append(json.dumps({"kind": "header", **run.to_dict()}))
+    lines.extend(json.dumps({"kind": "adapt_event", **e.to_dict()})
+                 for e in events)
+    return "\n".join(lines) + "\n"
+
+
 class _Hysteresis:
     """One signal's band state: arms at ``enter``, disarms only back at
     ``exit`` (enter > exit), accumulating observation weight while armed.

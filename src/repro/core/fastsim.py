@@ -464,10 +464,18 @@ def simulate(timings: Sequence[StageTiming], m: int,
              overlap_dp: bool = True, eager_slack: int = 2, vpp: int = 1,
              inflight_cap=None, trace=None) -> SimReport:
     """Drop-in fast equivalent of ``simulator.simulate`` (``vpp`` /
-    ``inflight_cap`` / ``trace`` apply to interleaved-1f1b only; ``timings``
-    are then pp*vpp entries in virtual order, and ``trace`` is appended
-    with the executed ``SimEvent`` list — op-for-op equal to the
-    oracle's)."""
+    ``inflight_cap`` apply to interleaved-1f1b only; ``timings`` are then
+    pp*vpp entries in virtual order).  ``trace`` is appended with the
+    executed ``SimEvent`` list — op-for-op equal to the oracle's for
+    interleaved-1f1b; the non-interleaved recurrences never materialise
+    per-op events, so a traced non-interleaved call delegates to the
+    oracle (trace requests come from plan-adoption rendering in
+    repro.obs, never from the planner's hot path)."""
+    if trace is not None and schedule != "interleaved-1f1b":
+        from repro.core import simulator
+        return simulator.simulate(timings, m, schedule, dp_allreduce,
+                                  overlap_dp, eager_slack, vpp,
+                                  inflight_cap, trace)
     pp = len(timings)
     f = [t.fwd for t in timings]
     b = [t.bwd for t in timings]

@@ -250,10 +250,12 @@ def simulate(timings: Sequence[StageTiming], m: int,
              overlap_dp: bool = True, eager_slack: int = 2, vpp: int = 1,
              inflight_cap: Optional[int] = None,
              trace: Optional[List[SimEvent]] = None) -> SimReport:
-    """``vpp``/``inflight_cap``/``trace`` only apply to
-    ``interleaved-1f1b`` (see module docstring for the virtual-order
-    ``timings`` convention; ``trace`` is appended with the executed
-    ``SimEvent`` list for memory accounting tests)."""
+    """``vpp``/``inflight_cap`` only apply to ``interleaved-1f1b`` (see
+    module docstring for the virtual-order ``timings`` convention).
+    ``trace`` is appended with the executed ``SimEvent`` list for every
+    schedule (non-interleaved ops carry ``vs == stage``) — memory
+    accounting tests and the observability predicted-lane renderer
+    (repro.obs.trace) consume it."""
     if schedule == "interleaved-1f1b":
         return _simulate_interleaved(timings, m, vpp, dp_allreduce,
                                      overlap_dp, inflight_cap, trace)
@@ -335,13 +337,18 @@ def simulate(timings: Sequence[StageTiming], m: int,
             raise ScheduleError(-1, -1, "?", schedule)  # pragma: no cover
         s, kind, i = best
         if kind == "F":
+            mb = nf[i]
             finish_f[i][nf[i]] = s + timings[i].fwd
             free[i] = finish_f[i][nf[i]]
             nf[i] += 1
         else:
+            mb = nb[i]
             finish_b[i][nb[i]] = s + timings[i].bwd
             free[i] = finish_b[i][nb[i]]
             nb[i] += 1
+        if trace is not None:
+            trace.append(SimEvent(start=s, finish=free[i], stage=i, vs=i,
+                                  microbatch=mb, dir=kind))
         done += 1
 
     end = max(max(r) for r in finish_b)

@@ -14,10 +14,36 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional, Sequence, Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+
+# -- observability tap (repro.obs) --------------------------------------
+# A module-level sink called at collective CONSTRUCTION time with
+# (op, transport, payload_bytes).  Collectives are built while jax traces
+# the program, so under jit the sink fires once per COMPILED PROGRAM, not
+# per executed step — that is the honest semantics of the resulting
+# counters ("what collectives does this program issue, and how big"),
+# and the reason enabling them costs nothing on the hot path.  None
+# (the default) short-circuits to a single comparison.
+_SINK: Optional[Callable[[str, str, int], None]] = None
+
+
+def set_collective_sink(sink: Optional[Callable[[str, str, int], None]]
+                        ) -> None:
+    """Install (or clear, with None) the trace-time collective sink."""
+    global _SINK
+    _SINK = sink
+
+
+def _note(op: str, transport: str, x) -> None:
+    if _SINK is not None:
+        try:
+            nbytes = int(x.size) * x.dtype.itemsize
+        except Exception:
+            nbytes = 0
+        _SINK(op, transport, nbytes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,24 +64,29 @@ class Communicator:
 
     # -- collectives ----------------------------------------------------
     def iallreduce(self, x):
+        _note("iallreduce", self.transport, x)
         x, orig = self._pack(x)
         return self._unpack(jax.lax.psum(x, self.axis), orig)
 
     def iallgather(self, x, axis: int = 0, tiled: bool = True):
+        _note("iallgather", self.transport, x)
         return jax.lax.all_gather(x, self.axis, axis=axis, tiled=tiled)
 
     def ireducescatter(self, x, axis: int = 0):
+        _note("ireducescatter", self.transport, x)
         x, orig = self._pack(x)
         return self._unpack(
             jax.lax.psum_scatter(x, self.axis, scatter_dimension=axis,
                                  tiled=True), orig)
 
     def ialltoall(self, x, split_axis: int, concat_axis: int):
+        _note("ialltoall", self.transport, x)
         return jax.lax.all_to_all(x, self.axis, split_axis=split_axis,
                                   concat_axis=concat_axis, tiled=True)
 
     def isend_irecv(self, x, perm: Sequence[Tuple[int, int]]):
         """P2P ring/pipeline transfer (paper's iSend/iReceive primitive)."""
+        _note("isend_irecv", self.transport, x)
         x, orig = self._pack(x)
         return self._unpack(jax.lax.ppermute(x, self.axis, perm=list(perm)),
                             orig)

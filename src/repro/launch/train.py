@@ -103,6 +103,22 @@ def main():
                     help="armed observations required before triggering")
     ap.add_argument("--adapt-cooldown", type=int, default=8,
                     help="observed steps of silence after any trigger")
+    # -- observability (repro.obs; docs/observability.md) ----------------
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace/Perfetto JSON timeline "
+                         "(predicted + observed lanes, AdaptEvent "
+                         "instants) to this path")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the append-only metrics JSONL stream to "
+                         "this path")
+    ap.add_argument("--events-out", default=None,
+                    help="write the AdaptEvent log as JSONL to this path")
+    ap.add_argument("--prom-out", default=None,
+                    help="write a Prometheus textfile snapshot at exit")
+    ap.add_argument("--flight-out", default=None,
+                    help="flight-recorder dump path (default: "
+                         "<ckpt-dir>/flight.json when any observability "
+                         "output is enabled)")
     args = ap.parse_args()
 
     if args.arch == "llama-100m":
@@ -162,6 +178,20 @@ def main():
         # one process, process_allgather fan-in on a real multi-host mesh
         aggregator = default_aggregator()
         adapt_kw = dict(search_kw)
+    obs = None
+    if args.trace_out or args.metrics_out or args.events_out \
+            or args.prom_out:
+        from repro.obs import Observability, RunMeta, install_sigterm
+        flight_out = args.flight_out or f"{args.ckpt_dir}/flight.json"
+        obs = Observability(
+            trace_out=args.trace_out, metrics_out=args.metrics_out,
+            events_out=args.events_out, prom_out=args.prom_out,
+            flight_out=flight_out,
+            run=RunMeta.new(plan=plan, arch=bundle.cfg.name))
+        # dump the decision ring when the cluster scheduler kills us
+        install_sigterm(obs.flight, flight_out)
+        print(f"[train] observability on: run={obs.run.run_id} "
+              f"plan_digest={obs.run.plan_digest}")
     t = Trainer(bundle, mesh,
                 TrainerConfig(global_batch=args.global_batch,
                               seq_len=args.seq, ckpt_dir=args.ckpt_dir,
@@ -169,7 +199,7 @@ def main():
                               telemetry=args.telemetry),
                 cluster=cluster, plan=plan, profile_store=store,
                 policy=policy, aggregator=aggregator,
-                adapt_search_kw=adapt_kw,
+                adapt_search_kw=adapt_kw, obs=obs,
                 opt_cfg=AdamWConfig(lr=args.lr, warmup_steps=20))
     n_params = sum(x.size for x in jax.tree.leaves(t.state["params"]))
     print(f"[train] arch={bundle.cfg.name} params={n_params/1e6:.1f}M "
@@ -177,40 +207,51 @@ def main():
     t0 = time.time()
     done = 0
     printed_events = 0
-    while done < args.steps:
-        chunk = min(args.log_every, args.steps - done)
-        if degrade_step is not None and done < degrade_step < done + chunk:
-            chunk = degrade_step - done      # land exactly on the injection
-        r = t.run(chunk)
-        done += chunk
-        dt = time.time() - t0
-        tok_s = done * args.global_batch * args.seq / dt
-        print(f"[train] step={t.step} loss={r['losses'][-1]:.4f} "
-              f"tok/s={tok_s:.0f}")
-        if degrade_kind and plan is not None and done >= degrade_step:
-            if args.adapt:
-                # autonomous path: only distort the telemetry — the
-                # controller detects, replans, gain-gates and migrates
-                t.inject_degrade(degrade_kind, degrade_factor)
-                print(f"[train] injected degrade {degrade_kind}:"
-                      f"{degrade_factor} at step {t.step} — controller "
-                      f"is on its own now")
-            else:
-                degraded = t.cluster.degrade(degrade_kind, degrade_factor)
-                res = t.replan(degraded, global_batch=args.global_batch,
-                               seq_len=args.seq, **search_kw)
-                plan = res.plan
-                print(f"[train] degraded {degrade_kind}:{degrade_factor} "
-                      f"-> replanned: {plan.describe()} "
-                      f"(migrations={t.migrations})")
-            degrade_kind = None
-        for ev in t.adapt_log[printed_events:]:
-            print(ev.format())
-        printed_events = len(t.adapt_log)
-        health = t.schedule_health()
-        if health is not None:
-            print(f"[train] bubble observed={health['observed_bubble']:.3f} "
-                  f"predicted={health['predicted_bubble']:.3f}")
+    try:
+        while done < args.steps:
+            chunk = min(args.log_every, args.steps - done)
+            if degrade_step is not None and \
+                    done < degrade_step < done + chunk:
+                chunk = degrade_step - done  # land on the injection step
+            r = t.run(chunk)
+            done += chunk
+            dt = time.time() - t0
+            tok_s = done * args.global_batch * args.seq / dt
+            print(f"[train] step={t.step} loss={r['losses'][-1]:.4f} "
+                  f"tok/s={tok_s:.0f}")
+            if degrade_kind and plan is not None and done >= degrade_step:
+                if args.adapt:
+                    # autonomous path: only distort the telemetry — the
+                    # controller detects, replans, gain-gates and migrates
+                    t.inject_degrade(degrade_kind, degrade_factor)
+                    print(f"[train] injected degrade {degrade_kind}:"
+                          f"{degrade_factor} at step {t.step} — controller "
+                          f"is on its own now")
+                else:
+                    degraded = t.cluster.degrade(degrade_kind,
+                                                 degrade_factor)
+                    res = t.replan(degraded,
+                                   global_batch=args.global_batch,
+                                   seq_len=args.seq, **search_kw)
+                    plan = res.plan
+                    print(f"[train] degraded {degrade_kind}:"
+                          f"{degrade_factor} -> replanned: "
+                          f"{plan.describe()} (migrations={t.migrations})")
+                degrade_kind = None
+            for ev in t.adapt_log[printed_events:]:
+                print(ev.format())
+            printed_events = len(t.adapt_log)
+            health = t.schedule_health()
+            if health is not None:
+                print(f"[train] bubble "
+                      f"observed={health['observed_bubble']:.3f} "
+                      f"predicted={health['predicted_bubble']:.3f}")
+    finally:
+        # artifacts survive a mid-run crash: whatever was recorded up to
+        # the failure is flushed and attributable to this run
+        if obs is not None:
+            obs.write_events(t.adapt_log)
+            obs.close()
     print(json.dumps({"final_loss": r["losses"][-1], "steps": t.step,
                       "params_m": round(n_params / 1e6, 1),
                       "replans": t.replans,

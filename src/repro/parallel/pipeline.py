@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.iccl.communicator import _note as _iccl_note
 from repro.models.config import ModelConfig
 from repro.models.transformer import (_block_fwd, _embed_tokens, _constrain_act,
                                       _unembed)
@@ -204,6 +205,9 @@ def make_pp_loss_fn(cfg: ModelConfig, mesh, n_stages: int,
                                  for s in range(n_stages)], jnp.float32)
             aux_sum = aux_sum + jnp.sum(auxs * valid)
             out = constrain(out, buf_spec)
+            # trace-time P2P accounting: the roll is the pipeline's
+            # stage->stage activation hop (collective-permute over 'pod')
+            _iccl_note("pp_shift", "pod", out)
             buf = jnp.roll(out, 1, axis=0)   # collective-permute over 'pod'
 
         _tick_mark(telemetry, m + n_stages - 1, loss_sum)
@@ -295,6 +299,7 @@ def _make_pp_loss_fn_vpp(cfg: ModelConfig, mesh, n_stages: int, m: int,
             out = constrain(out, buf_spec)
             # virtual slot shift: pod roll (collective-permute), then the
             # wrapped pod-0 row advances one chunk locally
+            _iccl_note("pp_shift", "pod", out)
             rolled = jnp.roll(out, 1, axis=0)
             buf = rolled.at[0].set(jnp.roll(rolled[0], 1, axis=0))
 

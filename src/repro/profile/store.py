@@ -256,6 +256,53 @@ class ProfileStore:
         return _multilinear(cands, axes, numeric, field)
 
 
+def main(argv: Optional[List[str]] = None) -> int:
+    """Inspector CLI: tabular dump of a profile store.
+
+        python -m repro.profile.store PATH [--kind OP] [--device KIND]
+
+    One row per entry — device kind, op, shape, observation count ``n``,
+    the value fields, provenance and ``obs_scale`` — replacing the old
+    debugging path of reading the raw JSON by hand."""
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.profile.store",
+        description="Tabular dump of a profile-store JSON file.")
+    ap.add_argument("path", help="profile store JSON file")
+    ap.add_argument("--kind", default=None,
+                    help="restrict to one entry kind/op "
+                         "(e.g. observed_stage_tick)")
+    ap.add_argument("--device", default=None,
+                    help="restrict to one device kind (e.g. gpu-a)")
+    args = ap.parse_args(argv)
+    try:
+        store = ProfileStore.load(args.path)
+    except (OSError, ValueError) as e:
+        ap.error(f"cannot read profile store {args.path!r}: {e}")
+    entries = store.entries(device_kind=args.device, op=args.kind)
+    entries.sort(key=lambda e: (e.device_kind, e.op,
+                                json.dumps(e.shape, sort_keys=True)))
+    print(f"{args.path}: {len(entries)}/{len(store)} entries "
+          f"(schema v{store.meta.get('version', '?')})")
+    hdr = (f"{'device':<12} {'op':<22} {'n':>7} {'value':<26} "
+           f"{'prov':<9} {'obs_scale':>9}  shape")
+    print(hdr)
+    print("-" * len(hdr))
+    for e in entries:
+        n = e.value.get("n", 1.0)
+        fields = " ".join(f"{k}={v:.6g}" for k, v in sorted(e.value.items())
+                          if k not in ("n", "obs_scale"))
+        prov = e.meta.get("provenance", "-")
+        scale = e.value.get("obs_scale")
+        shape = " ".join(f"{k}={e.shape[k]}" for k in sorted(e.shape))
+        print(f"{e.device_kind:<12} {e.op:<22} {n:>7.1f} {fields:<26} "
+              f"{prov:<9} "
+              f"{scale:>9.4f}  {shape}" if scale is not None else
+              f"{e.device_kind:<12} {e.op:<22} {n:>7.1f} {fields:<26} "
+              f"{prov:<9} {'-':>9}  {shape}")
+    return 0
+
+
 def _multilinear(cands: List[Entry], axes: List[str],
                  point: Dict[str, float], field: str) -> Optional[float]:
     if not axes:
@@ -284,3 +331,7 @@ def _multilinear(cands: List[Entry], axes: List[str],
         return None
     w = (x - lo) / (hi - lo)
     return v_lo * (1.0 - w) + v_hi * w
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -102,6 +102,15 @@ class StageTelemetry:
         self._last_ticks: Optional[List[float]] = None
         self._last_bubble: Optional[float] = None
         self._folds = 0
+        # Optional observability tap: called as sink(step, start_abs,
+        # durs) from _record for every KEPT observation (the dropped
+        # jit-compile step never reaches it).  step is the kept-step
+        # ordinal, start_abs the perf_counter wall time of the step's
+        # first tick (None in timer mode, whose buckets carry no wall
+        # anchor).  This rides the recorder's EXISTING host endpoint —
+        # binding a sink adds no callbacks to the compiled program, and
+        # the default None costs one comparison (repro.obs).
+        self.sink = None
 
     # ------------------------------------------------- callback endpoint --
     def on_tick(self, t, _probe=None) -> None:
@@ -124,6 +133,7 @@ class StageTelemetry:
             return
         self._marks.append(now)
         if t == self.n_ticks:
+            first = self._marks[0]
             diffs = [b - a for a, b in zip(self._marks, self._marks[1:])]
             self._marks = []
             # marks fire at end-of-tick: diffs are ticks 1..n_ticks-1 plus
@@ -133,7 +143,7 @@ class StageTelemetry:
             ticks = diffs[:-1]
             mean = (sum(ticks) / len(ticks) if ticks
                     else max(_EPS_S, diffs[-1]))
-            self._record([mean] + ticks)
+            self._record([mean] + ticks, start_abs=first - mean)
 
     # ----------------------------------------------------- timer endpoint --
     def observe_step(self, dt: float) -> None:
@@ -156,7 +166,8 @@ class StageTelemetry:
     # running without a profile store must not grow memory without bound
     MAX_FRESH = 256
 
-    def _record(self, durs: List[float]) -> None:
+    def _record(self, durs: List[float],
+                start_abs: Optional[float] = None) -> None:
         if self.drop_first and not self._dropped:
             self._dropped = True      # first step pays jit compile/caches
             return
@@ -166,6 +177,8 @@ class StageTelemetry:
             del self._fresh[:-self.MAX_FRESH]
         self._last_ticks = self._stage_ticks(durs)
         self._last_bubble = self._bubble_of(durs)
+        if self.sink is not None:
+            self.sink(self.steps, start_abs, durs)
 
     def _active(self, t: int) -> int:
         """Virtual slots doing useful (unmasked) work at tick t."""

@@ -98,12 +98,20 @@ class Trainer:
                  plan: Optional[ParallelPlan] = None,
                  opt_cfg: Optional[AdamWConfig] = None,
                  profile_store=None, policy=None, aggregator=None,
-                 adapt_search_kw: Optional[Dict[str, Any]] = None):
+                 adapt_search_kw: Optional[Dict[str, Any]] = None,
+                 obs=None):
         self.bundle = bundle
         self.mesh = mesh
         self.cfg = cfg
         self.cluster = cluster
         self.plan = plan
+        # observability (repro.obs.Observability): None (the default)
+        # leaves every hot path exactly as before — the telemetry sink
+        # stays unbound, no collective sink installs, and the run loop
+        # skips its per-step emission branch
+        self.obs = obs
+        if obs is not None:
+            obs.install_iccl()
         self.profile_store = profile_store   # repro.profile.ProfileStore
         # autonomous adaptation: policy (repro.adapt.ReplanPolicy) decides
         # when to replan; aggregator (repro.adapt aggregators) folds every
@@ -168,6 +176,12 @@ class Trainer:
                         else "timer")
             self.telemetry = (StageTelemetry(plan.pp, plan.vpp, m, mode=mode)
                               if mode != "off" else None)
+            if self.obs is not None and self.telemetry is not None:
+                # the observed-lane tap rides the recorder's existing
+                # host endpoint — no additional callbacks in the step
+                self.telemetry.sink = self.obs.make_telemetry_sink(
+                    plan, self._stage_kinds(), self.telemetry.mode,
+                    scales_fn=self._stage_scales)
             # only callback mode wires tick marks into the step — timer
             # mode must keep host callbacks off the hot path entirely
             loss_fn = pipeline.make_pp_loss_fn(
@@ -181,6 +195,13 @@ class Trainer:
             self.train_step = steps_mod.make_train_step(
                 self.bundle, self.rules, self.opt_cfg)
         self._jit = jax.jit(self.train_step, donate_argnums=0)
+        if self.obs is not None and self._pipeline_active() \
+                and self.cluster is not None:
+            # a (re)build IS a plan adoption: render a fresh predicted
+            # lane anchored here and stamp a plan record in the metrics
+            self.obs.on_plan_adopted(getattr(self, "step", 0), self.plan,
+                                     self.cluster, self.bundle.cfg,
+                                     self._stage_kinds())
 
     # -------------------------------------------------- state & layouts ---
     def _state_layout(self) -> Optional[Dict[str, Any]]:
@@ -273,6 +294,20 @@ class Trainer:
     def run(self, n_steps: int,
             on_straggler: Optional[Callable[["Trainer"], None]] = None
             ) -> Dict[str, Any]:
+        try:
+            return self._run(n_steps, on_straggler)
+        except Exception as e:
+            # a wedged schedule (planner/simulator ScheduleError) is the
+            # flight recorder's primary customer: dump the last few
+            # hundred controller decisions next to the stack trace
+            from repro.core.simulator import ScheduleError
+            if self.obs is not None and isinstance(e, ScheduleError):
+                self.obs.flight_dump("schedule-error")
+            raise
+
+    def _run(self, n_steps: int,
+             on_straggler: Optional[Callable[["Trainer"], None]] = None
+             ) -> Dict[str, Any]:
         losses = []
         for _ in range(n_steps):
             t0 = time.perf_counter()
@@ -317,6 +352,9 @@ class Trainer:
                 if on_cadence or \
                         not getattr(self.aggregator, "collective", False):
                     self._maybe_adapt()
+            # --- observability (repro.obs; default None = untouched) ---
+            if self.obs is not None:
+                self.obs.on_step(self.step, dt, self.schedule_health())
             if self.step % self.cfg.ckpt_every == 0:
                 self.ckpt.save_async(self.step, self.state,
                                      extra=self._ckpt_extra())
@@ -368,7 +406,7 @@ class Trainer:
         vl = list(plan.virtual_layers)
         lmax = max(vl)
         obs = self._obs_scales()
-        self.telemetry.fold_into(
+        folded = self.telemetry.fold_into(
             self.profile_store, [dev] * plan.pp,
             arch=self.bundle.cfg.name, seq_len=self.cfg.seq_len,
             tp=self.cfg.tp, schedule=plan.schedule,
@@ -382,6 +420,8 @@ class Trainer:
                 [obs.get(self.cluster.groups[st.group].device.name, 1.0)
                  for st in plan.stages]
                 if self.cluster is not None else None))
+        if self.obs is not None:
+            self.obs.on_fold(self.step, folded, dev)
 
     # ------------------------------------ autonomous adaptation (adapt) ---
     def inject_degrade(self, device_kind: str, factor: float) -> None:
@@ -404,6 +444,13 @@ class Trainer:
                              f"cluster has {known}")
         self._inject_scale[device_kind] = \
             self._inject_scale.get(device_kind, 1.0) * factor
+
+    def _stage_kinds(self):
+        """Per-PHYSICAL-stage device kind names ("?" without a cluster)."""
+        if self.cluster is None or self.plan is None:
+            return ["?"] * (self.plan.pp if self.plan else 0)
+        return [self.cluster.groups[st.group].device.name
+                for st in self.plan.stages]
 
     def _stage_scales(self):
         """Per-PHYSICAL-stage injected tick multipliers (1.0 = healthy)."""
@@ -525,6 +572,8 @@ class Trainer:
 
     def _emit(self, event) -> None:
         self.adapt_log.append(event)
+        if self.obs is not None:
+            self.obs.on_adapt_event(event)
 
     def _adapt_leader(self) -> bool:
         """Whether THIS process runs the policy/search.  Exactly one
@@ -796,6 +845,7 @@ class Trainer:
         self.plan = result.plan
         self.replans += 1
         self._build()
+        t_mig = time.perf_counter()
         migrated = False
         if migrate == "memory":
             try:
@@ -806,10 +856,18 @@ class Trainer:
                 self.state = self._place(host, shardings)
                 self.migrations["memory"] += 1
                 migrated = True
-            except Exception:   # noqa: BLE001 — any failure falls back to
-                pass            # the durable checkpoint round-trip
+            except Exception as e:  # noqa: BLE001 — any failure falls back
+                # to the durable checkpoint round-trip; the in-memory
+                # failure itself is a flight-recorder event (the fallback
+                # hides it from the caller, the post-mortem needs it)
+                if self.obs is not None and self.obs.flight is not None:
+                    self.obs.flight.note("migration-error", step=self.step,
+                                         error=repr(e))
+                    self.obs.flight_dump("migration-failure")
         if not migrated:
             self._init_or_restore()   # restores + migrates the checkpoint
+        if self.obs is not None:
+            self.obs.on_migration(time.perf_counter() - t_mig, migrated)
         # the rebuilt step recompiles on first use: restart the EWMA so the
         # compile step is neither folded into the profile nor flagged slow
         self._ewma = None

@@ -154,6 +154,95 @@ def test_recorder_fresh_bounded_without_fold():
     assert tele.steps == 30 and len(tele._fresh) == 8
 
 
+def test_recorder_timer_bucket_one_with_drop_first():
+    """bucket_steps=1 (the default): every bucket is a single step, so
+    drop_first swallows exactly the first observe_step and every later
+    step folds individually with bucketed provenance."""
+    tele = StageTelemetry(pp=2, vpp=1, m=4, mode="timer", bucket_steps=1)
+    tele.observe_step(3.0)                    # compile step: dropped
+    assert tele.steps == 0 and tele._fresh == []
+    for dt in (0.9, 1.2):
+        tele.observe_step(dt)
+    assert tele.steps == 2 and len(tele._fresh) == 2
+    # each kept step is its own bucket: no averaging across steps
+    nt = tele.n_ticks
+    assert tele._fresh[0] == pytest.approx([0.9 / 3 / nt] * nt)
+    assert tele._fresh[1] == pytest.approx([1.2 / 3 / nt] * nt)
+    st_ = ProfileStore()
+    n = tele.fold_into(st_, ["cpu", "cpu"], arch="m", seq_len=32, tp=1,
+                       schedule="1f1b", layers_per_vstage=[2, 2],
+                       padded_per_stage=[2, 2], micro_bs_per_stage=[2, 2])
+    assert n == 2
+    e = st_.get("cpu", "observed_stage_tick",
+                {"arch": "m", "seq_len": 32, "tp": 1, "schedule": "1f1b",
+                 "stage": 0, "pp": 2, "vpp": 1, "layers": 2,
+                 "padded_layers": 2, "micro_bs": 2})
+    assert e.value["n"] == 2 and e.meta["provenance"] == "bucketed"
+
+
+def test_recorder_timer_partial_final_bucket_discarded():
+    """A bucket still filling when the run ends must NEVER fold: a
+    partial mean is not the bucket's statistic, and fold_into reports 0
+    steps for it."""
+    tele = StageTelemetry(pp=2, vpp=1, m=4, mode="timer",
+                          drop_first=False, bucket_steps=3)
+    tele.observe_step(1.0)
+    tele.observe_step(1.0)                    # 2 of 3: bucket open
+    assert tele.steps == 0 and tele._bucket == [1.0, 1.0]
+    st_ = ProfileStore()
+    n = tele.fold_into(st_, ["cpu", "cpu"], arch="m", seq_len=32, tp=1,
+                       schedule="1f1b", layers_per_vstage=[2, 2],
+                       padded_per_stage=[2, 2], micro_bs_per_stage=[2, 2])
+    assert n == 0 and len(st_) == 0
+    assert tele.bubble() is None and tele.stage_ticks() is None
+    # completing the bucket afterwards folds exactly one observation
+    tele.observe_step(1.0)
+    assert tele.fold_into(
+        st_, ["cpu", "cpu"], arch="m", seq_len=32, tp=1, schedule="1f1b",
+        layers_per_vstage=[2, 2], padded_per_stage=[2, 2],
+        micro_bs_per_stage=[2, 2]) == 1
+
+
+def test_recorder_timer_drop_first_replan_mid_bucket():
+    """A replan rebuilds the trainer's recorder (Trainer._build makes a
+    fresh StageTelemetry): the half-filled bucket of the old recorder
+    dies with it — never folded — and the NEW recorder's drop_first
+    swallows its own first completed bucket again, because the rebuilt
+    jit step pays compilation exactly like the first one did."""
+    old = StageTelemetry(pp=2, vpp=1, m=4, mode="timer", bucket_steps=2)
+    old.observe_step(5.0)
+    old.observe_step(5.0)                      # first bucket: dropped
+    old.observe_step(1.0)
+    old.observe_step(1.0)                      # second bucket: kept
+    old.observe_step(1.0)                      # third bucket half-full
+    assert old.steps == 1 and len(old._bucket) == 1
+    st_ = ProfileStore()
+    kw = dict(arch="m", seq_len=32, tp=1, schedule="1f1b",
+              layers_per_vstage=[2, 2], padded_per_stage=[2, 2],
+              micro_bs_per_stage=[2, 2])
+    assert old.fold_into(st_, ["cpu", "cpu"], **kw) == 1   # not the partial
+    # --- replan: fresh recorder, same shape ---
+    new = StageTelemetry(pp=2, vpp=1, m=4, mode="timer", bucket_steps=2)
+    new.observe_step(9.0)
+    new.observe_step(9.0)                      # recompile bucket: dropped
+    assert new.steps == 0
+    assert new.fold_into(st_, ["cpu", "cpu"], **kw) == 0
+    new.observe_step(1.0)
+    new.observe_step(1.0)
+    assert new.steps == 1
+    assert new.fold_into(st_, ["cpu", "cpu"], **kw) == 1
+    e = st_.get("cpu", "observed_stage_tick",
+                {"arch": "m", "seq_len": 32, "tp": 1, "schedule": "1f1b",
+                 "stage": 0, "pp": 2, "vpp": 1, "layers": 2,
+                 "padded_layers": 2, "micro_bs": 2})
+    # both kept buckets were healthy 1.0s steps: the 9.0s recompile
+    # bucket and the orphaned partials left no trace in the mean
+    # (per slot: fwd third of the step, spread over n_ticks, shared by V)
+    nt, V = 4 + 2 - 1, 2
+    assert e.value["n"] == 2
+    assert e.value["tick_s"] == pytest.approx(1.0 / 3 / nt / V)
+
+
 # ------------------------------------------------- migrate layout algebra --
 def _toy_state(L, extra_master=True):
     rng = np.random.RandomState(0)

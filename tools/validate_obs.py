@@ -1,0 +1,192 @@
+#!/usr/bin/env python3
+"""Validate exported observability artifacts (CI tier-2 gate).
+
+    python tools/validate_obs.py --trace T.json --metrics M.jsonl \
+        [--events E.jsonl] [--expect-replan]
+
+Checks, without any third-party dependency:
+
+  * the trace is Chrome trace-event JSON: a ``traceEvents`` list whose
+    events carry a known phase, a numeric ``ts`` (metadata excepted),
+    ``dur >= 0`` on complete events, ``id`` on flow events — and the
+    run-identity header under ``otherData``;
+  * every metrics JSONL record matches ``tools/metrics_schema.json``
+    (per-kind required field -> type map; first record must be the
+    header);
+  * the events JSONL is a header plus ``adapt_event`` records;
+  * all supplied artifacts agree on ``run_id``;
+  * with ``--expect-replan``: the trace contains BOTH lanes (process
+    names ``predicted``/``observed``) and an ``adapt:migrate`` instant —
+    the acceptance shape of the instrumented autopilot smoke.
+
+Exit 0 on pass; exit 1 with one line per violation on fail.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+KNOWN_PHASES = {"X", "B", "E", "i", "I", "M", "s", "t", "f", "C",
+                "b", "e", "n"}
+
+_TYPES = {"str": str, "int": int, "number": (int, float),
+          "object": dict, "null": type(None)}
+
+
+def _type_ok(value, spec) -> bool:
+    specs = spec if isinstance(spec, list) else [spec]
+    for s in specs:
+        t = _TYPES[s]
+        if isinstance(value, t) and not (s in ("int", "number")
+                                         and isinstance(value, bool)):
+            return True
+    return False
+
+
+def validate_trace(path, expect_replan: bool = False):
+    """Returns (errors, run_id)."""
+    errors = []
+    try:
+        doc = json.loads(Path(path).read_text())
+    except Exception as e:  # noqa: BLE001
+        return [f"trace: unreadable JSON: {e}"], None
+    evs = doc.get("traceEvents")
+    if not isinstance(evs, list) or not evs:
+        return ["trace: traceEvents missing or empty"], None
+    run_id = (doc.get("otherData") or {}).get("run_id")
+    if not run_id:
+        errors.append("trace: otherData.run_id missing (no run identity)")
+    procs, instants = set(), set()
+    for i, e in enumerate(evs):
+        ph = e.get("ph")
+        if ph not in KNOWN_PHASES:
+            errors.append(f"trace[{i}]: unknown phase {ph!r}")
+            continue
+        if ph != "M" and not isinstance(e.get("ts"), (int, float)):
+            errors.append(f"trace[{i}]: {ph!r} event without numeric ts")
+        if ph == "X":
+            dur = e.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errors.append(f"trace[{i}]: complete event needs dur >= 0")
+        if ph in ("s", "t", "f") and "id" not in e:
+            errors.append(f"trace[{i}]: flow event without id")
+        if ph == "M" and e.get("name") == "process_name":
+            procs.add(e.get("args", {}).get("name", "").split(" ")[0])
+        if ph == "i":
+            instants.add(e.get("name"))
+    if expect_replan:
+        for lane in ("predicted", "observed"):
+            if lane not in procs:
+                errors.append(f"trace: {lane} lane missing (processes: "
+                              f"{sorted(procs)})")
+        if "adapt:migrate" not in instants:
+            errors.append(f"trace: no adapt:migrate instant (instants: "
+                          f"{sorted(instants)})")
+    return errors, run_id
+
+
+def validate_metrics(path, schema_path=None):
+    """Returns (errors, run_id)."""
+    schema_path = schema_path or Path(__file__).parent / \
+        "metrics_schema.json"
+    schema = json.loads(Path(schema_path).read_text())["kinds"]
+    errors = []
+    run_id = None
+    lines = Path(path).read_text().splitlines()
+    if not lines:
+        return ["metrics: empty stream"], None
+    for i, line in enumerate(lines):
+        if not line.strip():
+            continue
+        try:
+            rec = json.loads(line)
+        except Exception as e:  # noqa: BLE001
+            errors.append(f"metrics[{i}]: unparseable: {e}")
+            continue
+        kind = rec.get("kind")
+        if i == 0:
+            if kind != "header":
+                errors.append("metrics[0]: first record must be the "
+                              f"header, got kind={kind!r}")
+            run_id = rec.get("run_id")
+        if kind not in schema:
+            errors.append(f"metrics[{i}]: unknown kind {kind!r}")
+            continue
+        for field, spec in schema[kind].items():
+            if field not in rec:
+                errors.append(f"metrics[{i}] ({kind}): missing {field!r}")
+            elif not _type_ok(rec[field], spec):
+                errors.append(f"metrics[{i}] ({kind}): {field!r} has "
+                              f"type {type(rec[field]).__name__}, "
+                              f"expected {spec}")
+    return errors, run_id
+
+
+def validate_events(path):
+    """Returns (errors, run_id)."""
+    errors = []
+    run_id = None
+    for i, line in enumerate(Path(path).read_text().splitlines()):
+        if not line.strip():
+            continue
+        try:
+            rec = json.loads(line)
+        except Exception as e:  # noqa: BLE001
+            errors.append(f"events[{i}]: unparseable: {e}")
+            continue
+        kind = rec.get("kind")
+        if i == 0 and kind == "header":
+            run_id = rec.get("run_id")
+            continue
+        if kind != "adapt_event":
+            errors.append(f"events[{i}]: unknown kind {kind!r}")
+        elif not all(k in rec for k in ("step", "action", "reason")):
+            errors.append(f"events[{i}]: adapt_event missing "
+                          "step/action/reason")
+    return errors, run_id
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--trace", default=None)
+    ap.add_argument("--metrics", default=None)
+    ap.add_argument("--events", default=None)
+    ap.add_argument("--schema", default=None,
+                    help="metrics schema (default tools/metrics_schema"
+                         ".json)")
+    ap.add_argument("--expect-replan", action="store_true",
+                    help="require predicted+observed lanes and an "
+                         "adapt:migrate instant in the trace")
+    args = ap.parse_args(argv)
+    if not (args.trace or args.metrics or args.events):
+        ap.error("nothing to validate: pass --trace/--metrics/--events")
+    errors = []
+    run_ids = {}
+    if args.trace:
+        errs, rid = validate_trace(args.trace, args.expect_replan)
+        errors += errs
+        run_ids["trace"] = rid
+    if args.metrics:
+        errs, rid = validate_metrics(args.metrics, args.schema)
+        errors += errs
+        run_ids["metrics"] = rid
+    if args.events:
+        errs, rid = validate_events(args.events)
+        errors += errs
+        run_ids["events"] = rid
+    ids = {k: v for k, v in run_ids.items() if v}
+    if len(set(ids.values())) > 1:
+        errors.append(f"run identity mismatch across artifacts: {ids}")
+    for e in errors:
+        print(f"FAIL {e}")
+    if not errors:
+        checked = ", ".join(k for k, v in run_ids.items()
+                            if v is not None or k in run_ids)
+        print(f"OK {checked} (run {next(iter(ids.values()), '?')})")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
