@@ -13,7 +13,7 @@ best predicted iter_time no worse than the reference's (its candidate set
 and schedule sweep are supersets).
 
     PYTHONPATH=src:. python benchmarks/bench_planner.py [--quick]
-        [--schedules auto|LIST]
+        [--schedules auto|LIST] [--asymmetric]
         [--check-baseline benchmarks/BENCH_planner.baseline.json]
         [--write-baseline] [--record]
 
@@ -27,6 +27,19 @@ ratio regresses more than 2x over the committed baseline (``--factor``
 to override; the ratio cancels machine speed); ``--record`` snapshots
 the run to the *tracked* ``benchmarks/BENCH_planner.json`` — the repo's
 perf trajectory.
+
+``--asymmetric`` adds a uniform-vs-asymmetric A/B: the per-island-tp
+sweep against the uniform-tp sweep on the 96N768D cluster, plus the
+fig7 combos and two fig7-combo *variants* whose second island has 4
+accelerators per node.  On the exact fig7 specs asymmetric provably
+ties uniform (equal HBM/peaks/accel-per-node and proportional island
+sizes let the uniform sweep always reach an equal-dp plan, and the
+lcm-coupled tokens-per-tick makes mixed tp a pure superset with the
+same optimum) — the gate there is ratio <= 1.  The mixed form-factor
+variants are where the headroom physically lives: uniform tp is capped
+at the common divisor of the islands' accel-per-node while the
+asymmetric planner runs the 8-accel island at tp=8 under require_fit
+memory pressure, and the gate demands a STRICT win on at least one.
 """
 from __future__ import annotations
 
@@ -37,7 +50,8 @@ import time
 from pathlib import Path
 
 from benchmarks._paper import hetero_cluster
-from repro.configs.llama2_paper import LLAMA2_140B
+from repro.configs.llama2_paper import LLAMA2_70B, LLAMA2_140B
+from repro.core import cluster as C
 from repro.core import planner
 
 SEQ = 4096
@@ -57,16 +71,113 @@ def search_args(quick: bool) -> dict:
                 include_tp_comm=False)
 
 
+# --------------------------------------------- uniform-vs-asymmetric A/B --
+def _ab_combos(quick: bool):
+    """(name, cluster, model, search kwargs) rows for the per-island-tp A/B.
+
+    The first rows are the exact fig7 combos (tp widened to [4, 8] so the
+    asymmetric sweep has freedom) — expected outcome: exact tie.  The
+    ``/4apn`` rows re-host the same device pairing and accelerator count
+    with the second island in a 4-accel-per-node form factor and a model
+    big enough that require_fit bites — expected outcome: strict win
+    (uniform is stuck at tp=4 everywhere; asymmetric runs the 8-accel
+    island at tp=8)."""
+    fig7_kw = dict(global_batch=640, seq_len=SEQ,
+                   pp_options=[2, 4, 6], tp_options=[4, 8],
+                   micro_bs_options=[1], require_fit=False,
+                   schedule="1f1b-eager", include_tp_comm=False)
+    apn_kw = dict(global_batch=640, seq_len=SEQ,
+                  pp_options=[2, 4, 6, 8, 10, 12], tp_options=[4, 8],
+                  micro_bs_options=[1], require_fit=True,
+                  include_tp_comm=False)
+    rows = [
+        ("nvidia+A", C.ClusterSpec(groups=(C.NodeGroup(C.NVIDIA, 6),
+                                           C.NodeGroup(C.GPU_A, 6))),
+         LLAMA2_70B, fig7_kw),
+        ("nvidia+A/4apn",
+         C.ClusterSpec(groups=(C.NodeGroup(C.NVIDIA, 6),
+                               C.NodeGroup(C.GPU_A, 12, accel_per_node=4))),
+         LLAMA2_140B, apn_kw),
+    ]
+    if not quick:
+        rows[1:1] = [
+            ("amd+B", C.ClusterSpec(groups=(C.NodeGroup(C.AMD, 6),
+                                            C.NodeGroup(C.GPU_B, 6))),
+             LLAMA2_70B, fig7_kw),
+            ("amd+C", C.ClusterSpec(groups=(C.NodeGroup(C.AMD, 20),
+                                            C.NodeGroup(C.GPU_C, 100))),
+             LLAMA2_70B, dict(fig7_kw, global_batch=6400)),
+        ]
+        rows.append(
+            ("amd+B/4apn",
+             C.ClusterSpec(groups=(C.NodeGroup(C.AMD, 6),
+                                   C.NodeGroup(C.GPU_B, 12,
+                                               accel_per_node=4))),
+             LLAMA2_140B, apn_kw))
+    return rows
+
+
+def _ab_pair(cluster, model, kw: dict) -> dict:
+    """One uniform-vs-asymmetric fast-engine pair on the same sweep."""
+    out = {}
+    for tag, asym in (("uniform", False), ("asym", True)):
+        t0 = time.perf_counter()
+        res = planner.search(cluster, model, engine="fast",
+                             asymmetric=asym, **kw)
+        out[tag] = {"wall_s": round(time.perf_counter() - t0, 4),
+                    "evaluated": res.evaluated,
+                    "iter_time_s": res.prediction.iter_time,
+                    "plan": res.plan.describe()}
+    out["ratio"] = out["asym"]["iter_time_s"] / out["uniform"]["iter_time_s"]
+    out["strict"] = out["ratio"] < 1.0 - 1e-9
+    return out
+
+
+def run_asymmetric_ab(cluster96, kw: dict, quick: bool,
+                      verbose: bool = True) -> dict:
+    """The ``--asymmetric`` section: A/B on the 96N768D cluster with the
+    main sweep's args (tp widened so the asymmetric sweep has freedom),
+    then the fig7-combo table.  ``ok`` = asymmetric never loses anywhere
+    AND strictly wins on at least one combo row."""
+    kw96 = dict(kw, tp_options=sorted(set(kw["tp_options"]) | {4, 8}))
+    sec = {"cluster96": _ab_pair(cluster96, LLAMA2_140B, kw96),
+           "combos": []}
+    for name, cl, model, ckw in _ab_combos(quick):
+        pair = _ab_pair(cl, model, ckw)
+        pair["name"], pair["model"] = name, model.name
+        sec["combos"].append(pair)
+    sec["strict_win"] = any(r["strict"] for r in sec["combos"])
+    sec["ok"] = (sec["cluster96"]["ratio"] <= 1.0 + 1e-9
+                 and all(r["ratio"] <= 1.0 + 1e-9 for r in sec["combos"])
+                 and sec["strict_win"])
+    if verbose:
+        rows = [dict(sec["cluster96"], name="96N768D")] + sec["combos"]
+        for r in rows:
+            mark = "STRICT" if r.get("strict") else "tie"
+            print(f"  asym A/B {r['name']:14s} "
+                  f"uni={r['uniform']['iter_time_s']*1e3:10.1f} ms  "
+                  f"asym={r['asym']['iter_time_s']*1e3:10.1f} ms  "
+                  f"ratio={r['ratio']:.4f} ({mark})")
+        print(f"  asym A/B: strict_win={sec['strict_win']} "
+              f"ok={sec['ok']}")
+    return sec
+
+
 def run_engine(cluster, engine: str, kw: dict,
                schedules=("auto",)) -> dict:
+    # the headline fast-vs-reference comparison pins the uniform-tp sweep
+    # so its wall-time ratio stays comparable to the committed baseline;
+    # the per-island sweep's economics live in the --asymmetric section
     t0 = time.perf_counter()
     if engine == "reference" or list(schedules) == ["auto"]:
-        res = planner.search(cluster, LLAMA2_140B, engine=engine, **kw)
+        res = planner.search(cluster, LLAMA2_140B, engine=engine,
+                             asymmetric=False, **kw)
         evaluated = res.evaluated
     else:
         # restricted sweep: one pinned search per schedule, best wins
         results = [planner.search(cluster, LLAMA2_140B, engine=engine,
-                                  schedule=s, **kw) for s in schedules]
+                                  schedule=s, asymmetric=False, **kw)
+                   for s in schedules]
         res = min(results, key=lambda r: r.prediction.iter_time)
         evaluated = sum(r.evaluated for r in results)
     wall = time.perf_counter() - t0
@@ -84,7 +195,7 @@ def run_engine(cluster, engine: str, kw: dict,
 
 
 def run(quick: bool = False, verbose: bool = True,
-        schedules=("auto",)) -> dict:
+        schedules=("auto",), asymmetric: bool = False) -> dict:
     cluster = hetero_cluster(96)          # 96 nodes = 768 accelerators
     kw = search_args(quick)
     fast = run_engine(cluster, "fast", kw, schedules)
@@ -103,10 +214,14 @@ def run(quick: bool = False, verbose: bool = True,
         "iter_time_ratio": fast["iter_time_s"] / ref["iter_time_s"],
         "timestamp": time.time(),
     }
+    if asymmetric:
+        doc["asymmetric"] = run_asymmetric_ab(cluster, kw, quick,
+                                              verbose=verbose)
     # the >=10x claim is judged on the full reference search; --quick is
     # a deliberately tiny sweep whose job is the CI regression guard
     doc["ok"] = doc["iter_time_ratio"] <= 1.0 + 1e-9 and \
-        (quick or speedup >= 10.0)
+        (quick or speedup >= 10.0) and \
+        (not asymmetric or doc["asymmetric"]["ok"])
     OUT.parent.mkdir(parents=True, exist_ok=True)
     OUT.write_text(json.dumps(doc, indent=1))
     if verbose:
@@ -160,6 +275,10 @@ def main() -> int:
                     help="'auto' (full sweep incl. interleaved) or a "
                          "comma list of schedules to pin, e.g. "
                          "'1f1b,interleaved-1f1b'")
+    ap.add_argument("--asymmetric", action="store_true",
+                    help="also run the uniform-vs-asymmetric (per-island "
+                         "tp) A/B on the 96N cluster + fig7 combos and "
+                         "gate it (ties allowed, >=1 strict win required)")
     ap.add_argument("--check-baseline", type=Path, default=None,
                     help="fail on wall-time regression vs this baseline")
     ap.add_argument("--factor", type=float, default=2.0,
@@ -170,7 +289,8 @@ def main() -> int:
                     help=f"snapshot the run to the tracked {RECORD.name}")
     args = ap.parse_args()
     doc = run(quick=args.quick,
-              schedules=tuple(args.schedules.split(",")))
+              schedules=tuple(args.schedules.split(",")),
+              asymmetric=args.asymmetric)
     ok = doc["ok"]
     if args.write_baseline:
         BASELINE.write_text(json.dumps(

@@ -179,19 +179,31 @@ def manifest_extra(ckpt_dir: str, step: int) -> Dict:
 def plan_layout(plan) -> Optional[Dict[str, Any]]:
     """A ParallelPlan's stacked-block layout as a JSON-able dict (what the
     Trainer stamps into checkpoint manifests); None = the canonical
-    unstacked (L, ...) layout of a non-pipeline state."""
+    unstacked (L, ...) layout of a non-pipeline state.  ``stage_tp``
+    records each stage's tensor-parallel width: state arrays are stored
+    as full (unsharded) leaves, so a tp-width change never moves layer
+    CONTENT — but the layout must still record it so a migration across
+    an asymmetric-tp replan re-places the state under the new plan's
+    shardings rather than silently treating the layouts as equal."""
     if plan is None:
         return None
     return {"pp": plan.pp, "vpp": plan.vpp,
-            "virtual_layers": list(plan.virtual_layers)}
+            "virtual_layers": list(plan.virtual_layers),
+            "stage_tp": [s.tp for s in plan.stages]}
 
 
 def _norm_layout(layout) -> Optional[Dict[str, Any]]:
     if layout is None:
         return None
     if isinstance(layout, dict):
-        return {"pp": int(layout["pp"]), "vpp": int(layout["vpp"]),
-                "virtual_layers": [int(x) for x in layout["virtual_layers"]]}
+        pp = int(layout["pp"])
+        # manifests predating per-stage tp carry no stage_tp: default to
+        # width 1 everywhere (the restack migrate runs on real layers is
+        # the identity, so the compat default is safe, never lossy)
+        tps = layout.get("stage_tp") or [1] * pp
+        return {"pp": pp, "vpp": int(layout["vpp"]),
+                "virtual_layers": [int(x) for x in layout["virtual_layers"]],
+                "stage_tp": [int(x) for x in tps]}
     return plan_layout(layout)   # a ParallelPlan (duck-typed)
 
 
@@ -227,7 +239,10 @@ def migrate(state: Any, old_plan, new_plan) -> Any:
     unstack to canonical layer order, restack per the new plan's
     ``virtual_layers``.  Real layers are carried over bit-exactly (pure
     gathers/concats); padding rows are re-created as zeros, matching a
-    fresh stacked init.  Works on host numpy and device arrays alike and
+    fresh stacked init.  tp-width-changing layouts (asymmetric per-stage
+    tp replans) migrate the same way: leaves are full arrays, so width
+    only changes the target shardings the Trainer re-places under — the
+    content round-trip stays bit-exact (tests/test_replan.py).  Works on host numpy and device arrays alike and
     is traceable (jax.eval_shape uses it to derive layout shapes)."""
     old = _norm_layout(old_plan)
     new = _norm_layout(new_plan)

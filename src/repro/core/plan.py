@@ -1,8 +1,11 @@
 """Distributed training plan: the output of the automatic parallel planner.
 
-Level 1 (pipeline stages across heterogeneous groups) is non-uniform; levels
-2/3 (DP / TP inside homogeneous groups) are uniform — paper §3.3's search
-tree shape.
+Level 1 (pipeline stages across heterogeneous groups) is non-uniform, and
+so are levels 2/3: every stage carries its own ``(dp, tp)`` — paper §3.3's
+search tree shape, extended HexiScale-style so a fat island can run a wide
+tp while a weak island trades tp for dp.  Per-stage microbatch sizes follow
+from per-stage dp (``stage_micro_bs``), so ``(tp, dp, micro_bs)`` are all
+genuinely per-stage.
 """
 from __future__ import annotations
 
@@ -80,7 +83,19 @@ class ParallelPlan:
 
     @property
     def dp(self) -> int:
-        return self.stages[0].dp
+        """Widest data-parallel degree across stages (stages may differ on
+        a heterogeneous cluster — never assume stage 0 speaks for the
+        plan).  ``dp > 1`` iff ANY stage replicates gradients, which is
+        what the predictor's all-reduce gate needs."""
+        return max(s.dp for s in self.stages)
+
+    @property
+    def dps(self) -> Tuple[int, ...]:
+        return tuple(s.dp for s in self.stages)
+
+    @property
+    def tps(self) -> Tuple[int, ...]:
+        return tuple(s.tp for s in self.stages)
 
     @property
     def tokens_per_tick(self) -> int:
@@ -159,6 +174,14 @@ class ParallelPlan:
             sched += f"+{self.eager_slack}"
         elif sched == "interleaved-1f1b":
             sched += f"x{self.vpp}"
-        return (f"pp={self.pp} tp={self.stages[0].tp} dp={self.dp} "
+
+        def per_stage(vals: Tuple[int, ...]) -> str:
+            # honest rendering: one number only when the stages agree,
+            # else the full per-stage sequence
+            return (str(vals[0]) if len(set(vals)) == 1
+                    else ",".join(map(str, vals)))
+
+        return (f"pp={self.pp} tp={per_stage(self.tps)} "
+                f"dp={per_stage(self.dps)} "
                 f"mbs={self.micro_bs} m={self.micro_batches} "
                 f"sched={sched} seg={seg}")

@@ -4,7 +4,9 @@ Three-level search tree, DFS-traversed:
   level 1: pipeline degree PP + contiguous assignment of stages to node
            groups + (non-)uniform layer segmentation   [heterogeneous]
   level 2: uniform DP inside each homogeneous group    [homogeneous nodes]
-  level 3: uniform TP inside a node                    [accelerators]
+  level 3: TP width per island — uniform inside a group, asymmetric
+           across islands (HexiScale-style); boundary hops whose (tp, dp)
+           disagree are charged the predictor's reshard cost [accelerators]
 
 Rules guiding the DFS (paper):
   1. load balance — layers ∝ per-stage effective speed;  the fast engine
@@ -58,7 +60,7 @@ import dataclasses
 import math
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
-from repro.core import costmodel, fastsim, segmentation
+from repro.core import costmodel, fastsim, segmentation, simulator
 from repro.core.cluster import ClusterSpec
 from repro.core.plan import ParallelPlan, StagePlacement
 from repro.core.predictor import PerformancePredictor, Prediction
@@ -166,19 +168,49 @@ def _candidate_pps(cluster: ClusterSpec, n_layers: int,
     return sorted(opts)
 
 
-def _group_dp(cluster: ClusterSpec, groups: List[int], tp: int
+def _group_dp(cluster: ClusterSpec, groups: List[int], tp
               ) -> Optional[List[int]]:
     """Level 2: uniform DP inside each group (groups may differ:
-    microbatch sizes scale so token flow stays 1:1 per tick)."""
-    if any(g.accel_per_node % tp for g in cluster.groups):
-        return None
+    microbatch sizes scale so token flow stays 1:1 per tick).
+
+    ``tp`` is either one global width or a per-group sequence.  Only the
+    (group, tp) pairs of THIS assignment are checked — an indivisible
+    pair rejects this assignment alone, not the whole sweep level, so a
+    cluster mixing accel_per_node=6 and =8 islands can still run tp=8 on
+    the 8-accel island under a per-group assignment."""
+    tps = ([tp] * len(cluster.groups) if isinstance(tp, int)
+           else list(tp))
     dp_g = []
     for gi, g in enumerate(cluster.groups):
-        denom = tp * groups.count(gi)
+        if g.accel_per_node % tps[gi]:
+            return None
+        denom = tps[gi] * groups.count(gi)
         if g.n_accel % denom:
             return None
         dp_g.append(g.n_accel // denom)
     return dp_g
+
+
+def _tp_assignments(cluster: ClusterSpec, tp_options: Sequence[int],
+                    asymmetric: bool) -> List[Tuple[int, ...]]:
+    """Level 3 candidates: one tp width per ISLAND (all stages of a group
+    share it — tp lives inside a node, and a group's nodes are identical).
+
+    ``asymmetric`` sweeps the cross product of each group's feasible
+    widths (``accel_per_node`` divisibility prunes per pair); False keeps
+    the legacy uniform sweep — one global width per candidate — reachable
+    for A/B runs (benchmarks/bench_planner.py --asymmetric)."""
+    ng = len(cluster.groups)
+    if not asymmetric or ng == 1:
+        return [(t,) * ng for t in tp_options]
+    per_group = [[t for t in tp_options if g.accel_per_node % t == 0]
+                 for g in cluster.groups]
+    if any(not c for c in per_group):
+        return []
+    out = [()]
+    for cands in per_group:
+        out = [a + (t,) for a in out for t in cands]
+    return out
 
 
 def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
@@ -188,7 +220,7 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
            nonuniform: bool = True, schedule: str = "auto",
            eager_slack_options: Sequence[int] = DEFAULT_EAGER_SLACKS,
            vpp_options: Sequence[int] = (2, 3, 4),
-           explore_orders: bool = True,
+           explore_orders: bool = True, asymmetric: bool = True,
            calibration: float = 1.0, require_fit: bool = True,
            include_tp_comm: bool = True,
            cost_source: Optional[costmodel.CostSource] = None,
@@ -211,6 +243,13 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
     (fast islands at the pipeline ends); ``require_fit`` derives
     HBM-based ``max_layers`` caps from ``predictor.stage_max_layers`` so
     infeasible splits are pruned at segmentation time.
+
+    ``asymmetric`` (fast engine only) sweeps a tp width PER ISLAND
+    (HexiScale-style): each group's candidates are the ``tp_options``
+    its ``accel_per_node`` divides by, stages inherit their island's
+    width, and hops whose (tp, dp) disagree are charged the predictor's
+    boundary-reshard cost.  False restores the legacy one-global-tp
+    sweep (the uniform A/B baseline).
 
     ``baseline_plan`` (fast engine only) scores an incumbent plan — e.g.
     the one currently executing — as an extra candidate under the SAME
@@ -258,20 +297,22 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
     # vpp == 1 entries are scored under ``scheds``, vpp > 1 entries under
     # interleaved-1f1b with their own chunk-granular split.
     cands: List[tuple] = []
+    tp_assigns = _tp_assignments(cluster, tp_options, asymmetric)
     for pp in _candidate_pps(cluster, L, pp_options):                # level 1
         for groups in _stage_group_orders(cluster, pp, explore_orders):
-            for tp in tp_options:                                    # level 3
-                dp_g = _group_dp(cluster, groups, tp)                # level 2
+            for tp_g in tp_assigns:                                  # level 3
+                dp_g = _group_dp(cluster, groups, tp_g)              # level 2
                 if dp_g is None:
                     continue
                 dp_st = [dp_g[groups[i]] for i in range(pp)]
+                tp_st = [tp_g[groups[i]] for i in range(pp)]
                 for micro_bs in micro_bs_options:
                     # probe plan: tick/microbatch algebra lives in ONE
                     # place (ParallelPlan); layer counts do not enter it
                     probe = ParallelPlan(
                         stages=tuple(
                             StagePlacement(group=groups[i], n_layers=1,
-                                           dp=dp_st[i], tp=tp,
+                                           dp=dp_st[i], tp=tp_st[i],
                                            is_last=(i == pp - 1))
                             for i in range(pp)),
                         micro_bs=micro_bs, global_batch=global_batch,
@@ -281,11 +322,17 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
                     m = probe.micro_batches
                     mbs_st = [probe.stage_micro_bs(i) for i in range(pp)]
                     coeffs = [pred.stage_coeffs(
-                        groups[i], mbs_st[i], tp, dp_st[i], i == pp - 1,
+                        groups[i], mbs_st[i], tp_st[i], dp_st[i],
+                        i == pp - 1,
                         groups[i + 1] if i + 1 < pp else None, seq_len)
                         for i in range(pp)]
                     t_pl = [c.fwd_per_layer + c.bwd_per_layer
                             for c in coeffs]
+                    # per-hop (tp, dp) boundary-reshard extras (zero on
+                    # uniform assignments) — same layer-independent hop
+                    # slot as the P2P send; last entry is the wrap hop
+                    ext = pred.boundary_reshard(probe)
+                    resharded = any(x > 0.0 for x in ext)
                     # HBM-derived segmentation caps (1f1b is the least
                     # memory-hungry schedule in the sweep, so its caps
                     # never exclude a split some schedule could fit;
@@ -293,8 +340,8 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
                     caps = None
                     if require_fit:
                         caps = [pred.stage_max_layers(
-                            groups[i], mbs_st[i], tp, dp_st[i], i, pp, m,
-                            seq_len) for i in range(pp)]
+                            groups[i], mbs_st[i], tp_st[i], dp_st[i],
+                            i, pp, m, seq_len) for i in range(pp)]
                         if min(caps) < 1 or sum(
                                 min(c, L) for c in caps) < L:
                             continue     # no split of L layers can fit
@@ -308,7 +355,8 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
                         # per-layer times: with a profile these are
                         # measured, closing the nameplate-TFLOPs gap
                         offs = [c.fwd_const + c.bwd_const + c.send
-                                for c in coeffs]
+                                + (ext[i] if i < pp - 1 else 0.0)
+                                for i, c in enumerate(coeffs)]
                         splits[tuple(segmentation.dp_split(
                             L, t_pl, offs, max_layers=caps))] = "dp"
                         prop = segmentation.nonuniform_split(
@@ -324,11 +372,18 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
                         stages = tuple(
                             StagePlacement(group=groups[i],
                                            n_layers=split[i],
-                                           dp=dp_st[i], tp=tp,
+                                           dp=dp_st[i], tp=tp_st[i],
                                            is_last=(i == pp - 1))
                             for i in range(pp))
                         timings = [c.timing(n)
                                    for c, n in zip(coeffs, split)]
+                        if resharded:
+                            timings = [
+                                simulator.StageTiming(
+                                    fwd=t.fwd, bwd=t.bwd,
+                                    send=t.send
+                                    + (ext[i] if i < pp - 1 else 0.0))
+                                for i, t in enumerate(timings)]
                         base = ParallelPlan(
                             stages=stages, micro_bs=micro_bs,
                             global_batch=global_batch, seq_len=seq_len)
@@ -341,9 +396,9 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
                     # assignment — finer chunks re-balance differently)
                     for vpp in vpps:
                         cand = _interleaved_candidate(
-                            pred, cluster, cfg, groups, dp_st, tp,
-                            micro_bs, m, mbs_st, coeffs, t_pl, caps, L,
-                            vpp, global_batch, seq_len)
+                            pred, cluster, cfg, groups, dp_st, tp_st,
+                            micro_bs, m, mbs_st, coeffs, t_pl, ext,
+                            caps, L, vpp, global_batch, seq_len)
                         if cand is not None:
                             cands.append(cand)
 
@@ -402,15 +457,18 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
 
 def _interleaved_candidate(pred: PerformancePredictor, cluster: ClusterSpec,
                            cfg: ModelConfig, groups: List[int],
-                           dp_st: List[int], tp: int, micro_bs: int, m: int,
+                           dp_st: List[int], tp_st: List[int],
+                           micro_bs: int, m: int,
                            mbs_st: List[int], coeffs, t_pl: List[float],
+                           ext: List[float],
                            caps: Optional[List[int]], L: int, vpp: int,
                            global_batch: int, seq_len: int
                            ) -> Optional[tuple]:
     """One interleaved-1f1b phase-1 candidate: chunk-granular dp_split
     over the pp*vpp virtual stages (per-chunk per-layer time = the host
-    stage's; offsets = per-hop P2P sends incl. the pp-1 -> 0 wrap and the
-    final chunk's unembedding), virtual timings, and its lower bound.
+    stage's; offsets = per-hop P2P sends incl. the pp-1 -> 0 wrap, the
+    per-hop boundary-reshard extras ``ext``, and the final chunk's
+    unembedding), virtual timings, and its lower bound.
     Returns None when vpp doesn't fit (L < pp*vpp, or the HBM caps admit
     no chunk split)."""
     pp = len(groups)
@@ -423,7 +481,7 @@ def _interleaved_candidate(pred: PerformancePredictor, cluster: ClusterSpec,
         # per chunk (loose: the binding constraint is the per-stage sum,
         # which p.fits enforces post-scoring)
         caps_int = [pred.stage_max_layers(
-            groups[i], mbs_st[i], tp, dp_st[i], i, pp, m, seq_len,
+            groups[i], mbs_st[i], tp_st[i], dp_st[i], i, pp, m, seq_len,
             schedule="interleaved-1f1b", vpp=vpp) for i in range(pp)]
         if min(caps_int) < 1 or sum(
                 min(c * vpp, L) for c in caps_int) < L:
@@ -437,9 +495,9 @@ def _interleaved_candidate(pred: PerformancePredictor, cluster: ClusterSpec,
         if vs == V - 1:
             off_v.append(coeffs[i].fwd_const + coeffs[i].bwd_const)
         elif i == pp - 1:
-            off_v.append(wrap)
+            off_v.append(wrap + ext[i])
         else:
-            off_v.append(coeffs[i].send)
+            off_v.append(coeffs[i].send + ext[i])
     caps_v = ([caps_int[vs % pp] for vs in range(V)]
               if caps_int is not None else None)
     chunk = segmentation.dp_split(L, t_v, off_v, max_layers=caps_v)
@@ -447,7 +505,7 @@ def _interleaved_candidate(pred: PerformancePredictor, cluster: ClusterSpec,
              for i in range(pp)]
     stages = tuple(
         StagePlacement(group=groups[i], n_layers=split[i], dp=dp_st[i],
-                       tp=tp, is_last=(i == pp - 1))
+                       tp=tp_st[i], is_last=(i == pp - 1))
         for i in range(pp))
     plan = ParallelPlan(stages=stages, micro_bs=micro_bs,
                         global_batch=global_batch, seq_len=seq_len,

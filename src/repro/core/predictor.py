@@ -175,6 +175,67 @@ class PerformancePredictor:
             self._dp_coeffs[key] = out
         return out
 
+    def reshard_time(self, ga: int, gb: int, mbs_a: int, mbs_b: int,
+                     tp_a: int, tp_b: int, dp_a: int, dp_b: int,
+                     seq_len: int, transport: str = "gpu") -> float:
+        """Boundary resharding seconds when adjacent stages disagree on
+        (tp, dp) — the cost of the all-gather + re-split the pipeline
+        inserts on the pod edge (parallel/pipeline.py).  Zero when the
+        placements match, so uniform plans keep their committed timings.
+
+        tp mismatch: the sending stage all-gathers the model-sharded
+        activation over its intra-node link (ring factor (tp_a-1)/tp_a of
+        its microbatch volume) and the receiving stage re-splits over its
+        own ((tp_b-1)/tp_b).  dp mismatch: per-replica microbatch sizes
+        differ across the edge, so activations take one extra pass over
+        the boundary link to regroup onto the new replica width."""
+        if tp_a == tp_b and dp_a == dp_b:
+            return 0.0
+        key = ("reshard", ga, gb, mbs_a, mbs_b, tp_a, tp_b, dp_a, dp_b,
+               seq_len, transport)
+        if self._memo:
+            hit = self._dp_coeffs.get(key)
+            if hit is not None:
+                return hit
+        out = 0.0
+        if tp_a != tp_b:
+            vol_a = self.src.comm_volume(self.cfg, mbs_a, seq_len,
+                                         1, 1).pp_p2p
+            vol_b = self.src.comm_volume(self.cfg, mbs_b, seq_len,
+                                         1, 1).pp_p2p
+            bw_a = self.cluster.groups[ga].intra_node_gbps * GBPS
+            bw_b = self.cluster.groups[gb].intra_node_gbps * GBPS
+            out += (vol_a * (tp_a - 1) / tp_a / bw_a
+                    + vol_b * (tp_b - 1) / tp_b / bw_b)
+        if dp_a != dp_b:
+            bw = self.src.link_gbps(self.cluster, ga, gb, transport)
+            vol = self.src.comm_volume(self.cfg, max(mbs_a, mbs_b),
+                                       seq_len, 1, 1).pp_p2p
+            out += vol / (bw * GBPS)
+        if self._memo:
+            self._dp_coeffs[key] = out
+        return out
+
+    def boundary_reshard(self, plan: ParallelPlan) -> List[float]:
+        """Per-hop resharding extras for a plan, added on top of each
+        stage's P2P ``send``.  Entry i is the hop OUT of physical stage i:
+        to stage i+1 for i < pp-1, and the pp-1 -> 0 wrap for the last
+        entry (charged only where a wrap hop exists, i.e. interleaved
+        plans).  All-zero for uniform (tp, dp) plans."""
+        pp = plan.pp
+        out = []
+        for i in range(pp):
+            j = (i + 1) % pp
+            if pp == 1:
+                out.append(0.0)
+                continue
+            a, b = plan.stages[i], plan.stages[j]
+            out.append(self.reshard_time(
+                a.group, b.group, plan.stage_micro_bs(i),
+                plan.stage_micro_bs(j), a.tp, b.tp, a.dp, b.dp,
+                plan.seq_len, plan.transport))
+        return out
+
     def virtual_timings(self, plan: ParallelPlan,
                         coeffs: Optional[List[StageCoeffs]] = None
                         ) -> List[simulator.StageTiming]:
@@ -195,6 +256,9 @@ class PerformancePredictor:
             wrap = self.p2p_time(
                 plan.stages[-1].group, plan.stages[0].group,
                 plan.stage_micro_bs(pp - 1), plan.seq_len, plan.transport)
+        # per-hop (tp, dp) boundary resharding rides the same hop as the
+        # P2P send (zero on uniform plans)
+        resh = self.boundary_reshard(plan)
         out = []
         for vs in range(V):
             i = vs % pp
@@ -207,18 +271,28 @@ class PerformancePredictor:
                 bwd += c.bwd_const
                 send = 0.0
             elif i == pp - 1:
-                send = wrap
+                send = wrap + resh[i]
             else:
-                send = c.send
+                send = c.send + resh[i]
             out.append(simulator.StageTiming(fwd=fwd, bwd=bwd, send=send))
         return out
 
     def stage_timing(self, plan: ParallelPlan, i: int) -> simulator.StageTiming:
         st = plan.stages[i]
-        return self.stage_coeffs(
+        t = self.stage_coeffs(
             st.group, plan.stage_micro_bs(i), st.tp, st.dp, st.is_last,
             plan.stages[i + 1].group if i + 1 < plan.pp else None,
             plan.seq_len, plan.transport).timing(st.n_layers)
+        if i + 1 < plan.pp:
+            nx = plan.stages[i + 1]
+            extra = self.reshard_time(
+                st.group, nx.group, plan.stage_micro_bs(i),
+                plan.stage_micro_bs(i + 1), st.tp, nx.tp, st.dp, nx.dp,
+                plan.seq_len, plan.transport)
+            if extra:
+                t = simulator.StageTiming(fwd=t.fwd, bwd=t.bwd,
+                                          send=t.send + extra)
+        return t
 
     def _dp_coeff(self, group: int, tp: int, dp: int,
                   seq_len: int, transport: str) -> float:

@@ -153,6 +153,25 @@ class Observability:
             self.flight.note("plan-adopted", step=step, digest=digest,
                              plan=plan.describe())
 
+    def on_search(self, step: int, result) -> None:
+        """Stamp a planner search's sweep economics into the metrics
+        stream: how many per-stage-parallelism candidates were actually
+        scored vs skipped by the lower-bound cutoff.  The asymmetric
+        sweep multiplies the candidate space (per-island tp cross
+        product), so the scored/pruned split is the signal that the
+        bound is still doing its job."""
+        if self.metrics is not None:
+            self.metrics.count("planner_candidates",
+                               float(getattr(result, "evaluated", 0)),
+                               outcome="scored")
+            self.metrics.count("planner_candidates",
+                               float(getattr(result, "pruned", 0)),
+                               outcome="pruned")
+        if self.flight is not None:
+            self.flight.note("planner-search", step=step,
+                             evaluated=getattr(result, "evaluated", 0),
+                             pruned=getattr(result, "pruned", 0))
+
     # ------------------------------------------------------- adapt loop ---
     def on_adapt_event(self, event) -> None:
         """Funnel for every AdaptEvent the trainer emits."""

@@ -120,10 +120,15 @@ def pp_param_specs(specs: Dict[str, Any]) -> Dict[str, Any]:
     return out
 
 
+def _mixed_tp(stage_tp: Optional[Sequence[int]]) -> bool:
+    return stage_tp is not None and len(set(stage_tp)) > 1
+
+
 def make_pp_loss_fn(cfg: ModelConfig, mesh, n_stages: int,
                     n_microbatches: int,
                     layers_per_stage: Optional[Sequence[int]] = None,
-                    vpp: int = 1, telemetry=None):
+                    vpp: int = 1, telemetry=None,
+                    stage_tp: Optional[Sequence[int]] = None):
     """Builds loss_fn(params, batch) running the pod-axis pipeline.
 
     ``vpp > 1`` runs interleaved virtual stages: params stacked
@@ -134,6 +139,15 @@ def make_pp_loss_fn(cfg: ModelConfig, mesh, n_stages: int,
     activations to pod 0 at the next chunk (the planner's
     interleaved-1f1b wrap-around hop).
 
+    ``stage_tp`` (per-physical-stage tensor widths, from the plan's
+    ``tps``) arms the asymmetric-parallelism boundary reshard: when
+    stages disagree on tp and activations are model-sharded
+    (``cfg.act_sharding``), the buffer is constrained model-UNsharded for
+    the pod roll — GSPMD lowers that to the all-gather at the sender and
+    the re-split at the receiver (the collectives the predictor's
+    ``reshard_time`` charges).  Numerically the round trip is the
+    identity, so mixed-tp plans keep reference loss/grads bit-for-bit.
+
     ``telemetry`` (repro.telemetry.StageTelemetry) inserts ordered
     host-callback tick boundaries so the trainer can observe per-stage
     compute and bubble online (the HETHUB closed loop)."""
@@ -141,9 +155,13 @@ def make_pp_loss_fn(cfg: ModelConfig, mesh, n_stages: int,
     kind = kinds[0]
     assert len(set(kinds)) == 1, "PP requires a uniform scanned stack"
     m = n_microbatches
+    if stage_tp is not None:
+        assert len(stage_tp) == n_stages, \
+            f"stage_tp needs {n_stages} entries, got {len(stage_tp)}"
     if vpp > 1:
         return _make_pp_loss_fn_vpp(cfg, mesh, n_stages, m,
-                                    layers_per_stage, vpp, kind, telemetry)
+                                    layers_per_stage, vpp, kind, telemetry,
+                                    stage_tp)
 
     if layers_per_stage is not None:
         lmax = max(layers_per_stage)
@@ -168,6 +186,11 @@ def make_pp_loss_fn(cfg: ModelConfig, mesh, n_stages: int,
 
     buf_spec = P(_stage_axis(mesh), ("data",),
                  "model" if cfg.act_sharding else None, None)
+    # asymmetric tp: the hop crosses stages of different model widths, so
+    # the rolled buffer must leave the sender model-UNsharded (all-gather)
+    # and the next tick's buf_spec constraint re-splits it at the receiver
+    hop_spec = (P(_stage_axis(mesh), ("data",), None, None)
+                if _mixed_tp(stage_tp) and cfg.act_sharding else buf_spec)
 
     def loss_fn(params, batch):
         tokens, labels = batch["tokens"], batch["labels"]
@@ -204,7 +227,11 @@ def make_pp_loss_fn(cfg: ModelConfig, mesh, n_stages: int,
             valid = jnp.asarray([1.0 if 0 <= t - s < m else 0.0
                                  for s in range(n_stages)], jnp.float32)
             aux_sum = aux_sum + jnp.sum(auxs * valid)
-            out = constrain(out, buf_spec)
+            out = constrain(out, hop_spec)
+            if hop_spec is not buf_spec:
+                # boundary reshard (tp-asymmetric plans): the constraint
+                # above is the model-axis all-gather before the hop
+                _iccl_note("pp_reshard", "model", out)
             # trace-time P2P accounting: the roll is the pipeline's
             # stage->stage activation hop (collective-permute over 'pod')
             _iccl_note("pp_shift", "pod", out)
@@ -219,7 +246,8 @@ def make_pp_loss_fn(cfg: ModelConfig, mesh, n_stages: int,
 
 def _make_pp_loss_fn_vpp(cfg: ModelConfig, mesh, n_stages: int, m: int,
                          layers_per_stage: Optional[Sequence[int]],
-                         vpp: int, kind: str, telemetry=None):
+                         vpp: int, kind: str, telemetry=None,
+                         stage_tp: Optional[Sequence[int]] = None):
     """Interleaved virtual-stage pipeline: the (n_stages, vpp, B, S, D)
     buffer holds one in-flight microbatch per VIRTUAL stage; each tick runs
     every (pod, chunk) slot, then activations shift one virtual slot —
@@ -259,6 +287,10 @@ def _make_pp_loss_fn_vpp(cfg: ModelConfig, mesh, n_stages: int, m: int,
 
     buf_spec = P(_stage_axis(mesh), None, ("data",),
                  "model" if cfg.act_sharding else None, None)
+    # same boundary-reshard rule as the vpp=1 builder: mixed stage tp
+    # means the pod roll carries model-UNsharded activations
+    hop_spec = (P(_stage_axis(mesh), None, ("data",), None, None)
+                if _mixed_tp(stage_tp) and cfg.act_sharding else buf_spec)
 
     def loss_fn(params, batch):
         tokens, labels = batch["tokens"], batch["labels"]
@@ -296,7 +328,9 @@ def _make_pp_loss_fn_vpp(cfg: ModelConfig, mesh, n_stages: int, m: int,
                 [[1.0 if 0 <= t - (c * pp + s) < m else 0.0
                   for c in range(vpp)] for s in range(pp)], jnp.float32)
             aux_sum = aux_sum + jnp.sum(auxs * valid)
-            out = constrain(out, buf_spec)
+            out = constrain(out, hop_spec)
+            if hop_spec is not buf_spec:
+                _iccl_note("pp_reshard", "model", out)
             # virtual slot shift: pod roll (collective-permute), then the
             # wrapped pod-0 row advances one chunk locally
             _iccl_note("pp_shift", "pod", out)

@@ -123,6 +123,7 @@ class Trainer:
         self.adapt_log: list = []        # structured AdaptEvents
         self._adapt_seen = 0             # telemetry steps already shown
         self._inject_scale: Dict[str, float] = {}
+        self._inject_bubble = 1.0        # observed-bubble injection factor
         self._cluster_view = None        # cached aggregator.gather result
         self._store_tick_state = None    # (n, n·mean) sums per stage at
         #                                  the last policy look (delta
@@ -187,7 +188,8 @@ class Trainer:
             loss_fn = pipeline.make_pp_loss_fn(
                 self.bundle.cfg, self.mesh, plan.pp, m,
                 layers_per_stage=list(plan.virtual_layers), vpp=plan.vpp,
-                telemetry=(self.telemetry if mode == "callback" else None))
+                telemetry=(self.telemetry if mode == "callback" else None),
+                stage_tp=list(plan.tps))
             self.train_step = steps_mod.make_train_step(
                 self.bundle, self.rules, self.opt_cfg, loss_fn=loss_fn)
         else:
@@ -444,6 +446,19 @@ class Trainer:
                              f"cluster has {known}")
         self._inject_scale[device_kind] = \
             self._inject_scale.get(device_kind, 1.0) * factor
+
+    def inject_link_degrade(self, factor: float) -> None:
+        """Boundary-link INJECTION, ``inject_degrade``'s sibling for the
+        wrong-schedule signal: make the OBSERVED pipeline bubble report
+        ``factor``x the recorder's value from now on.  A slowed
+        inter-island boundary link stretches exactly the send-dominated
+        idle ticks — stage compute is untouched, so the straggler signal
+        stays quiet and the bubble ratio in ``schedule_health`` is what
+        departs from prediction (the scenario the ``replan-schedule``
+        policy decision exists for).  Factors compose multiplicatively."""
+        if factor <= 0:
+            raise ValueError(f"factor must be > 0, got {factor}")
+        self._inject_bubble *= factor
 
     def _stage_kinds(self):
         """Per-PHYSICAL-stage device kind names ("?" without a cluster)."""
@@ -708,6 +723,7 @@ class Trainer:
                 self.plan.pp, self.plan.vpp, self.plan.micro_batches)
         if observed is None:
             return None
+        observed *= self._inject_bubble
         # the predicted bubble is constant for a (plan, cluster) pair, and
         # the adaptive loop asks every step — simulate once per pair, not
         # per step (cache invalidates itself when replan swaps either)
@@ -817,9 +833,13 @@ class Trainer:
                 search_kw["cost_source"] = src
         if self.plan is not None:
             search_kw.setdefault("baseline_plan", self.plan)
-        return planner_mod.search(new_cluster, self.bundle.cfg,
-                                  global_batch=global_batch,
-                                  seq_len=seq_len, **search_kw)
+        result = planner_mod.search(new_cluster, self.bundle.cfg,
+                                    global_batch=global_batch,
+                                    seq_len=seq_len, **search_kw)
+        if self.obs is not None:
+            self.obs.on_search(self.step if hasattr(self, "step") else 0,
+                               result)
+        return result
 
     def _adopt(self, result, new_cluster: ClusterSpec,
                migrate: str = "memory") -> None:

@@ -5,11 +5,11 @@ import math
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.configs.llama2_paper import LLAMA2_70B, LLAMA2_7B
+from repro.configs.llama2_paper import LLAMA2_140B, LLAMA2_70B, LLAMA2_7B
 from repro.core import cluster as C
 from repro.core import planner, segmentation
 from repro.core.plan import ParallelPlan, StagePlacement
-from repro.core.predictor import PerformancePredictor
+from repro.core.predictor import GBPS, PerformancePredictor
 from repro.core.simulator import (StageTiming, peak_activation_microbatches,
                                   simulate)
 
@@ -164,3 +164,112 @@ def test_planner_homogeneous_prefers_uniform():
                          pp_options=[4], tp_options=[8],
                          micro_bs_options=[1], require_fit=False)
     assert max(res.plan.layers) - min(res.plan.layers) <= 1
+
+
+# -------------------------------------- per-stage (tp, dp) plan surface ----
+def _two_island_plan(tp_g, dp_g, groups=(0, 1), mbs=1):
+    stages = tuple(
+        StagePlacement(group=g, n_layers=4, dp=dp_g[g], tp=tp_g[g],
+                       is_last=(i == len(groups) - 1))
+        for i, g in enumerate(groups))
+    return ParallelPlan(stages=stages, micro_bs=mbs, global_batch=48,
+                        seq_len=512)
+
+
+def test_plan_describe_and_roundtrip_per_stage():
+    """describe() renders per-stage tp/dp honestly (single number only
+    when stages agree) and to_dict/from_dict round-trips non-uniform
+    placements exactly."""
+    uni = _two_island_plan((8, 8), (2, 2))
+    assert " tp=8 " in uni.describe() and " dp=2 " in uni.describe()
+    mixed = _two_island_plan((8, 4), (2, 4))
+    d = mixed.describe()
+    assert " tp=8,4 " in d and " dp=2,4 " in d
+    assert mixed.tps == (8, 4) and mixed.dps == (2, 4)
+    # plan.dp keeps the widest-replication semantics the predictor gates on
+    assert mixed.dp == 4
+    back = ParallelPlan.from_dict(mixed.to_dict())
+    assert back == mixed
+    assert back.tps == (8, 4) and back.dps == (2, 4)
+
+
+def test_reshard_time_components():
+    """The boundary-reshard cost model: zero when (tp, dp) match; a tp
+    mismatch charges the ring all-gather on the sender's intra-node link
+    plus the re-split on the receiver's; a dp mismatch charges one extra
+    boundary-link pass at the wider microbatch volume."""
+    cl = C.ClusterSpec(groups=(C.NodeGroup(C.NVIDIA, 2),
+                               C.NodeGroup(C.GPU_A, 2)))
+    pred = PerformancePredictor(cl, LLAMA2_70B, include_tp_comm=False)
+    seq = 512
+    vol = lambda mbs: pred.src.comm_volume(
+        LLAMA2_70B, mbs, seq, 1, 1).pp_p2p
+    assert pred.reshard_time(0, 1, 1, 1, 8, 8, 2, 2, seq) == 0.0
+    got = pred.reshard_time(0, 1, 1, 1, 8, 4, 2, 2, seq)
+    bw0 = cl.groups[0].intra_node_gbps * GBPS
+    bw1 = cl.groups[1].intra_node_gbps * GBPS
+    want = vol(1) * (7 / 8) / bw0 + vol(1) * (3 / 4) / bw1
+    assert got == pytest.approx(want, rel=1e-12)
+    got_dp = pred.reshard_time(0, 1, 2, 1, 8, 8, 2, 4, seq)
+    link = pred.src.link_gbps(cl, 0, 1, "gpu") * GBPS
+    assert got_dp == pytest.approx(vol(2) / link, rel=1e-12)
+    # both mismatched: the components add
+    both = pred.reshard_time(0, 1, 2, 1, 8, 4, 2, 4, seq)
+    assert both == pytest.approx(
+        vol(2) * (7 / 8) / bw0 + vol(1) * (3 / 4) / bw1 + vol(2) / link,
+        rel=1e-12)
+
+
+# ------------------------------------------- asymmetric per-island sweep ---
+def test_group_dp_skips_pair_not_level():
+    """An indivisible (group, tp) pair rejects only assignments touching
+    it: on an 8+6 accel-per-node cluster uniform tp=8 and tp=6 are both
+    impossible, but the per-group (8, 6) assignment is fine."""
+    cl = C.ClusterSpec(groups=(C.NodeGroup(C.NVIDIA, 2),
+                               C.NodeGroup(C.GPU_A, 2, accel_per_node=6)))
+    groups = [0, 1]
+    assert planner._group_dp(cl, groups, 8) is None
+    assert planner._group_dp(cl, groups, 6) is None
+    assert planner._group_dp(cl, groups, (8, 6)) == [2, 2]
+    # and the assignment generator only emits feasible per-group widths
+    assert planner._tp_assignments(cl, [6, 8], asymmetric=True) == [(8, 6)]
+    assert planner._tp_assignments(cl, [6, 8], asymmetric=False) \
+        == [(6, 6), (8, 8)]
+
+
+def test_asymmetric_search_rescues_mixed_accel_per_node():
+    """Same cluster end-to-end: the uniform sweep has no feasible plan at
+    all, the asymmetric sweep runs each island at its native width."""
+    cl = C.ClusterSpec(groups=(C.NodeGroup(C.NVIDIA, 2),
+                               C.NodeGroup(C.GPU_A, 2, accel_per_node=6)))
+    kw = dict(global_batch=48, seq_len=512, pp_options=[2],
+              tp_options=[6, 8], micro_bs_options=[1], require_fit=False,
+              include_tp_comm=False)
+    with pytest.raises(RuntimeError, match="no feasible plan"):
+        planner.search(cl, LLAMA2_70B, asymmetric=False, **kw)
+    res = planner.search(cl, LLAMA2_70B, asymmetric=True, **kw)
+    assert sorted(res.plan.tps) == [6, 8]
+    for st_ in res.plan.stages:
+        assert cl.groups[st_.group].accel_per_node % st_.tp == 0
+
+
+def test_asymmetric_no_worse_and_strict_win_under_memory_pressure():
+    """The asymmetric sweep is a superset of the uniform one, so its
+    winner is never worse; on a mixed 8/4-accel-per-node cluster under
+    require_fit it is STRICTLY better — uniform is capped at tp=4
+    everywhere while the asymmetric planner runs the 8-accel island at
+    tp=8 (the benchmark's fig7-variant venue, pinned to pp=12 here to
+    keep the test fast)."""
+    cl = C.ClusterSpec(groups=(C.NodeGroup(C.NVIDIA, 6),
+                               C.NodeGroup(C.GPU_A, 12, accel_per_node=4)))
+    kw = dict(global_batch=640, seq_len=4096, pp_options=[12],
+              tp_options=[4, 8], micro_bs_options=[1], require_fit=True,
+              include_tp_comm=False)
+    uni = planner.search(cl, LLAMA2_140B, asymmetric=False, **kw)
+    asym = planner.search(cl, LLAMA2_140B, asymmetric=True, **kw)
+    assert asym.prediction.iter_time < uni.prediction.iter_time
+    assert len(set(asym.plan.tps)) > 1
+    assert len(set(uni.plan.tps)) == 1
+    # every stage still respects its island's node width
+    for st_ in asym.plan.stages:
+        assert cl.groups[st_.group].accel_per_node % st_.tp == 0

@@ -111,6 +111,36 @@ def test_pipeline_vpp_grads_and_train_step():
     assert float(moved) > 0.0
 
 
+def test_pipeline_vpp_mixed_tp_matches_reference():
+    """Asymmetric per-stage tp arms the boundary reshard in BOTH loss
+    builders (the pod-roll buffer is constrained model-unsharded when
+    stages disagree on width): the all-gather/re-split round trip is the
+    numerical identity, so interleaved mixed-tp plans keep loss AND
+    gradients reference-exact."""
+    assert pipeline._mixed_tp([2, 1]) and not pipeline._mixed_tp([4, 4])
+    b = registry.get_bundle("llama3-8b", smoke=True, num_layers=4,
+                            act_sharding=(("data",), "model", None))
+    cfg = b.cfg
+    params = b.init(jax.random.PRNGKey(0), cfg)
+    m, Bt, S = 4, 2, 32
+    batch = registry.make_batch(cfg, batch=m * Bt, seq=S)
+    rules = ShardingRules(cfg, tp=1, dp_axes=("data",))
+    ref = steps.make_loss_fn(b, rules)(params, batch)[0]
+    g_ref = jax.grad(lambda p: steps.make_loss_fn(b, rules)(p, batch)[0])(
+        params)
+    pp_batch = {k: v.reshape(m, Bt, *v.shape[1:]) for k, v in batch.items()}
+    for vpp, vl in [(1, [3, 1]), (2, [2, 1, 1, 0])]:
+        pp_params = pipeline.stack_blocks_for_stages(params, 2, vl, vpp=vpp)
+        lf = pipeline.make_pp_loss_fn(cfg, None, 2, m, layers_per_stage=vl,
+                                      vpp=vpp, stage_tp=[2, 1])
+        got = jax.jit(lf)(pp_params, pp_batch)[0]
+        assert abs(float(ref) - float(got)) < 1e-4
+        g_pp = jax.jit(jax.grad(lambda p: lf(p, pp_batch)[0]))(pp_params)
+        assert float(jnp.max(jnp.abs(g_ref["embed"] - g_pp["embed"]))) < 1e-4
+    with pytest.raises(AssertionError, match="stage_tp needs 2 entries"):
+        pipeline.make_pp_loss_fn(cfg, None, 2, m, stage_tp=[2, 1, 1])
+
+
 def test_pipeline_mpod_compiles_sharded():
     """Full fwd+bwd+AdamW pipeline step compiles on a (2,2,2) fake-device
     mesh with collective-permutes on the pod axis (subprocess: device count

@@ -272,7 +272,14 @@ def _rand_layout(rng, L):
     cuts = sorted(rng.choice(range(1, L), size=V - 1, replace=False)) \
         if V > 1 else []
     vl = [b - a for a, b in zip([0] + list(cuts), list(cuts) + [L])]
-    return {"pp": pp, "vpp": vpp, "virtual_layers": vl}
+    out = {"pp": pp, "vpp": vpp, "virtual_layers": vl}
+    # most layouts pin per-stage tensor widths (asymmetric plans); the
+    # rest keep the legacy manifest shape, which _norm_layout must
+    # default to tp=1 everywhere
+    if rng.rand() < 0.75:
+        out["stage_tp"] = [int(rng.choice([1, 2, 4, 8]))
+                           for _ in range(pp)]
+    return out
 
 
 def test_migrate_roundtrip_seeded():
@@ -313,6 +320,49 @@ def test_migrate_roundtrip_property(L, seed):
     want = ((la["pp"], lmax, 3, 2) if la["vpp"] == 1
             else (la["pp"], la["vpp"], lmax, 3, 2))
     assert w.shape == want
+
+
+def test_migrate_tp_width_change_bit_exact_vs_checkpoint_restart(tmp_path):
+    """A replan that changes per-stage tp re-PLACES shards but never
+    rewrites content (state leaves are stored full): migrating the live
+    state across a tp-width-changing layout equals restoring the
+    pre-change checkpoint and migrating the restored state — bit for
+    bit."""
+    L = 6
+    state = _toy_state(L)
+    old = {"pp": 2, "vpp": 1, "virtual_layers": [3, 3], "stage_tp": [1, 1]}
+    new = {"pp": 3, "vpp": 1, "virtual_layers": [2, 2, 2],
+           "stage_tp": [4, 2, 1]}
+    stacked = ckpt.migrate(state, None, old)
+    ckpt.save(str(tmp_path), 1, stacked, extra={"layout": old})
+    live = ckpt.migrate(stacked, old, new)
+    restored, _ = ckpt.restore(str(tmp_path), 1, stacked)
+    restarted = ckpt.migrate(restored, old, new)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), live, restarted)
+    # round trip through the wider-tp layout is still the identity
+    back = ckpt.migrate(live, new, None)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), state, back)
+
+
+def test_migrate_tp_only_delta_and_legacy_default():
+    """Layouts identical except ``stage_tp`` compare UNEQUAL (the
+    migration machinery must run — the new widths need re-placement)
+    yet migrate is the content identity; manifests predating per-stage
+    tp normalize to tp=1 everywhere."""
+    stacked = ckpt.migrate(_toy_state(4), None,
+                           {"pp": 2, "vpp": 1, "virtual_layers": [2, 2],
+                            "stage_tp": [1, 1]})
+    la = {"pp": 2, "vpp": 1, "virtual_layers": [2, 2], "stage_tp": [1, 1]}
+    lb = {"pp": 2, "vpp": 1, "virtual_layers": [2, 2], "stage_tp": [8, 2]}
+    assert ckpt._norm_layout(la) != ckpt._norm_layout(lb)
+    out = ckpt.migrate(stacked, la, lb)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), stacked, out)
+    legacy = {"pp": 2, "vpp": 1, "virtual_layers": [2, 2]}
+    assert ckpt._norm_layout(legacy)["stage_tp"] == [1, 1]
+    assert ckpt._norm_layout(legacy) == ckpt._norm_layout(la)
 
 
 # ------------------------------------------------ planner incumbent score --

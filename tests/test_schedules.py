@@ -328,6 +328,114 @@ def test_planner_require_fit_reject_then_fit():
             cl.groups[st_.group].device.hbm_gb
 
 
+# --------------------------- non-uniform per-stage (tp, dp, mbs) plans ----
+def _rand_asymmetric_plan(rng):
+    """A random two-island plan whose stages may disagree on (tp, dp) —
+    the asymmetric shapes the per-island planner sweep emits.  Returns
+    (cluster, plan) or None when the rolled (tp, counts) combination is
+    infeasible (caller rerolls)."""
+    cl = C.ClusterSpec(groups=(
+        C.NodeGroup(rng.choice([C.NVIDIA, C.AMD]), rng.choice([2, 4, 6])),
+        C.NodeGroup(rng.choice([C.GPU_A, C.GPU_B]), rng.choice([2, 4, 6]))))
+    pp = rng.randint(2, 5)
+    n0 = rng.randint(1, pp - 1)
+    groups = [0] * n0 + [1] * (pp - n0)
+    tp_g = (rng.choice([2, 4, 8]), rng.choice([2, 4, 8]))
+    dp_g = planner._group_dp(cl, groups, tp_g)
+    if dp_g is None:
+        return None
+    L = rng.randint(pp, 24)
+    cuts = sorted(rng.sample(range(1, L), pp - 1)) if pp > 1 else []
+    split = [b - a for a, b in zip([0] + cuts, cuts + [L])]
+    stages = tuple(
+        StagePlacement(group=groups[i], n_layers=split[i],
+                       dp=dp_g[groups[i]], tp=tp_g[groups[i]],
+                       is_last=(i == pp - 1))
+        for i in range(pp))
+    sch = rng.choice(ALL_SCHEDULES)
+    vpp = rng.randint(2, 3) if sch == "interleaved-1f1b" else 1
+    probe = ParallelPlan(stages=stages, micro_bs=rng.choice([1, 2]),
+                         global_batch=1, seq_len=512, schedule=sch,
+                         vpp=vpp, eager_slack=rng.choice([0, 1, 2, 4]))
+    m = rng.randint(max(2, pp * vpp), 16)
+    plan = dataclasses.replace(probe,
+                               global_batch=m * probe.tokens_per_tick)
+    return cl, plan
+
+
+def test_asymmetric_per_stage_plans_match_oracle_seeded():
+    """>= 60 randomized plans with per-stage (tp, dp, mbs) — at least 40
+    with genuinely mixed tp widths: the predictor's timings (which fold
+    the boundary-reshard extras into the hop sends) drive fastsim to
+    EXACT agreement with the event oracle on every schedule, the
+    lower bound stays valid, and ``predict`` (the planner's scoring
+    path) reproduces the oracle's iter_time bit for bit."""
+    rng = random.Random(11)
+    cases = mixed = 0
+    while cases < 60:
+        rolled = _rand_asymmetric_plan(rng)
+        if rolled is None:
+            continue
+        cl, plan = rolled
+        if mixed < 40 and len(set(plan.tps)) == 1:
+            continue     # force coverage of genuinely asymmetric shapes
+        pred = PerformancePredictor(cl, LLAMA2_70B,
+                                    include_tp_comm=False)
+        m = plan.micro_batches
+        sch, vpp = plan.schedule, plan.vpp
+        if sch == "interleaved-1f1b":
+            timings = pred.virtual_timings(plan)
+        else:
+            timings = [pred.stage_timing(plan, i)
+                       for i in range(plan.pp)]
+        dp = pred.dp_allreduce_time(plan)
+        r = _assert_equal(timings, m, sch, vpp=vpp,
+                          slack=plan.eager_slack, dp=dp)
+        assert r.iter_time >= fastsim.lower_bound(
+            timings, m, dp, vpp=vpp) - 1e-9
+        p = pred.predict(plan)
+        assert p.iter_time == pytest.approx(r.iter_time, rel=1e-12)
+        cases += 1
+        mixed += len(set(plan.tps)) > 1
+    assert mixed >= 40
+
+
+def test_boundary_reshard_extras_surface_in_timings():
+    """A mixed-tp hop's reshard cost lands exactly once, on the sending
+    stage's ``send`` slot: re-deriving the uniform-width timing and
+    adding ``boundary_reshard`` reproduces ``stage_timing``, and a
+    uniform plan's extras are identically zero."""
+    cl = C.ClusterSpec(groups=(C.NodeGroup(C.NVIDIA, 2),
+                               C.NodeGroup(C.GPU_A, 2)))
+    pred = PerformancePredictor(cl, LLAMA2_70B, include_tp_comm=False)
+
+    def mk(tp_g):
+        groups = [0, 1]
+        dp_g = planner._group_dp(cl, groups, tp_g)
+        stages = tuple(
+            StagePlacement(group=g, n_layers=4, dp=dp_g[g], tp=tp_g[g],
+                           is_last=(i == 1))
+            for i, g in enumerate(groups))
+        return ParallelPlan(stages=stages, micro_bs=1, global_batch=64,
+                            seq_len=512)
+
+    uni, mixed = mk((8, 8)), mk((8, 4))
+    assert pred.boundary_reshard(uni) == [0.0, 0.0]
+    ext = pred.boundary_reshard(mixed)
+    # entry 0: the mixed 0->1 hop; entry 1: the wrap hop (also mixed
+    # here) — computed for interleaved reuse but never applied at vpp=1
+    assert ext[0] > 0.0 and ext[1] > 0.0
+    t0 = pred.stage_timing(mixed, 0)
+    c = pred.plan_coeffs(mixed)
+    assert t0.send == pytest.approx(c[0].timing(4).send + ext[0],
+                                    rel=1e-12)
+    t1 = pred.stage_timing(mixed, 1)
+    assert t1.send == pytest.approx(c[1].timing(4).send, rel=1e-12)
+    # oracle and fastsim agree on the resharded timings too
+    _assert_equal([t0, pred.stage_timing(mixed, 1)],
+                  mixed.micro_batches, "1f1b")
+
+
 # --------------------------------------------------- planner regression ---
 def test_planner_interleaved_sweep_no_worse_than_recorded():
     """engine='fast' with the interleaved sweep enabled must return an
