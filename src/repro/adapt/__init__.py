@@ -9,14 +9,16 @@ telemetry step and invokes ``degrade``/``replan``/migrate itself,
 emitting a structured ``AdaptEvent`` log (docs/adaptation.md is the
 operator runbook).
 """
-from repro.adapt.aggregate import (OBSERVED_OPS, InMemoryFanIn,
-                                   LocalAggregator,
+from repro.adapt.aggregate import (OBSERVED_OPS, ElectingFanIn,
+                                   InMemoryFanIn, LocalAggregator,
+                                   MembershipView,
                                    ProcessAllGatherAggregator,
                                    default_aggregator, merge_stores)
 from repro.adapt.policy import (AdaptConfig, AdaptDecision, AdaptEvent,
                                 ReplanPolicy, events_json)
 
-__all__ = ["AdaptConfig", "AdaptDecision", "AdaptEvent", "InMemoryFanIn",
-           "LocalAggregator", "OBSERVED_OPS", "ProcessAllGatherAggregator",
+__all__ = ["AdaptConfig", "AdaptDecision", "AdaptEvent", "ElectingFanIn",
+           "InMemoryFanIn", "LocalAggregator", "MembershipView",
+           "OBSERVED_OPS", "ProcessAllGatherAggregator",
            "ReplanPolicy", "default_aggregator", "events_json",
            "merge_stores"]

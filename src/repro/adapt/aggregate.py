@@ -24,14 +24,26 @@ double counting.  Three aggregators, one protocol:
     uint8 payloads, since allgather wants equal shapes), then merged.
 
 Aggregators also carry the DECISION side of the multi-host protocol:
-``is_leader()`` names the one process whose policy evaluates (process 0
-on a real mesh), and ``broadcast(obj)`` ships the leader's adaptation
-directive to every process — so the collective plan adoption
-(checkpoint, jit-step rebuild, live migration) is entered by ALL
-processes together or by none, never gated on per-process policy state.
-``collective`` marks aggregators whose gather/broadcast are real
-collectives: the Trainer calls those only at a step-synchronized
-cadence.
+``is_leader()`` names the one process whose policy evaluates, and
+``broadcast(obj)`` ships the leader's adaptation directive to every
+process — so the collective plan adoption (checkpoint, jit-step rebuild,
+live migration) is entered by ALL processes together or by none, never
+gated on per-process policy state.  ``collective`` marks aggregators
+whose gather/broadcast are real collectives: the Trainer calls those
+only at a step-synchronized cadence.
+
+LEADER RE-ELECTION (elastic membership): leadership is not pinned to
+process 0 — it is the LOWEST SURVIVING RANK.  When the leader's node
+leaves the cluster, ``lose_rank`` removes it from the surviving set and
+``leader_rank()``/``is_leader()`` deterministically re-elect on every
+process without any election traffic (each process computes the same
+minimum from the same membership facts); ``broadcast`` then originates
+from the new leader.  ``rejoin_rank`` restores a rank.  The rank-loss
+facts come from outside the protocol (the cluster scheduler, the launch
+harness, a test's ``MembershipView``) — on a real mesh a hard-dead
+process stalls the collectives themselves, so ``lose_rank`` models the
+decision protocol AFTER the runtime's surviving processes have reformed
+(or, in the simulated harnesses, immediately).
 
 ``default_aggregator()`` picks by ``jax.process_count()`` — the launch
 layer wires it through, so a multi-pod run needs no extra flags
@@ -100,6 +112,93 @@ class InMemoryFanIn(_LocalDecisionProtocol):
         return merge_stores([local] + peers)
 
 
+class MembershipView:
+    """Shared membership ledger for SIMULATED multi-process runs (CPU
+    test meshes): the alive-rank set every simulated process's
+    ``ElectingFanIn`` reads, plus the broadcast log the surviving leader
+    writes directives into.  One instance is shared by all simulated
+    peers — losing a rank flips every peer's ``is_leader()`` answer at
+    once, exactly like the deterministic rule on a real mesh."""
+
+    def __init__(self, n_ranks: int):
+        if n_ranks < 1:
+            raise ValueError(f"need >= 1 rank, got {n_ranks}")
+        self.n_ranks = n_ranks
+        self.alive = set(range(n_ranks))
+        self.log: list = []        # every directive broadcast (None incl.)
+
+    def lose(self, rank: int) -> None:
+        if rank not in self.alive:
+            raise ValueError(f"rank {rank} is not alive ({self.alive})")
+        if len(self.alive) == 1:
+            raise ValueError("cannot lose the last surviving rank")
+        self.alive.discard(rank)
+
+    def rejoin(self, rank: int) -> None:
+        if not 0 <= rank < self.n_ranks:
+            raise ValueError(f"rank {rank} out of range 0..{self.n_ranks-1}")
+        self.alive.add(rank)
+
+    def leader(self) -> int:
+        """Deterministic election: the lowest surviving rank leads."""
+        return min(self.alive)
+
+
+class ElectingFanIn(InMemoryFanIn):
+    """Rank-aware ``InMemoryFanIn``: the decision protocol of a simulated
+    multi-process mesh WITH leader re-election.  Each simulated process
+    holds one instance (its rank + local stores) over a shared
+    ``MembershipView``; ``is_leader()`` answers by the
+    lowest-surviving-rank rule, so killing the leader's rank re-elects
+    instantly and deterministically on every survivor.
+
+    ``broadcast`` mirrors the wire protocol minus the wire: the current
+    leader appends its directive (None included — every cadence point
+    broadcasts) to the shared log and followers replay it in order, JSON
+    round-tripped exactly as ``ProcessAllGatherAggregator`` would deliver
+    it.  A follower whose cursor has caught up to the log (its leader is
+    dead or behind) reads None and does not advance — when this process
+    is later elected, it starts writing instead.  ``collective`` is True:
+    a real deployment's equivalent runs collectives, so the Trainer must
+    drive this one from its step-synchronized cadence too."""
+
+    collective = True
+
+    def __init__(self, view: MembershipView, rank: int, stores=None):
+        super().__init__(stores)
+        if not 0 <= rank < view.n_ranks:
+            raise ValueError(f"rank {rank} out of range "
+                             f"0..{view.n_ranks - 1}")
+        self.view = view
+        self.rank = rank
+        self._cursor = 0              # next view.log slot this rank reads
+
+    def is_leader(self) -> bool:
+        return self.rank == self.view.leader()
+
+    def lose_rank(self, rank: int) -> None:
+        self.view.lose(rank)
+
+    def rejoin_rank(self, rank: int) -> None:
+        self.view.rejoin(rank)
+
+    def leader_rank(self) -> int:
+        return self.view.leader()
+
+    def broadcast(self, obj):
+        if self.is_leader():
+            wired = None if obj is None else json.loads(json.dumps(obj))
+            self.view.log.append(wired)
+            self._cursor = len(self.view.log)
+            return wired
+        assert obj is None, "a follower never originates a directive"
+        if self._cursor < len(self.view.log):
+            out = self.view.log[self._cursor]
+            self._cursor += 1
+            return out
+        return None                   # leader dead/behind: nothing sent
+
+
 class ProcessAllGatherAggregator:
     """Real multi-process meshes: allgather each process's observed
     telemetry entries and merge them into a fresh cluster view.
@@ -109,16 +208,45 @@ class ProcessAllGatherAggregator:
     JSON -> uint8 arrays padded to the gathered max length (allgather
     needs equal shapes across processes).
 
-    Decision side: process 0 leads, and ``broadcast`` ships its directive
-    as a length-prefixed JSON payload via
-    ``multihost_utils.broadcast_one_to_all`` — both are COLLECTIVES and
-    must be entered by every process at the same step (the Trainer calls
-    them only from its step-synchronized cadence point)."""
+    Decision side: the LOWEST SURVIVING RANK leads (process 0 until
+    ``lose_rank`` says otherwise), and ``broadcast`` ships its directive
+    as a length-padded JSON payload selected out of a
+    ``process_allgather`` — gather-then-select rather than
+    ``broadcast_one_to_all`` because the latter pins the root to process
+    0, and a re-elected leader must be able to originate.  Both are
+    COLLECTIVES and must be entered by every process at the same step
+    (the Trainer calls them only from its step-synchronized cadence
+    point).  ``lose_rank`` facts must arrive identically on every
+    surviving process (they come from the same membership directive /
+    scheduler signal), so each computes the same leader with no election
+    traffic."""
 
     collective = True
 
     def __init__(self, ops: Sequence[str] = OBSERVED_OPS):
         self.ops = tuple(ops)
+        self._lost: set = set()
+
+    # ----------------------------------------------- leader (re-)election --
+    def lose_rank(self, rank: int) -> None:
+        """Mark ``rank``'s process as gone; every process applying the
+        same fact re-elects the same new leader (lowest survivor)."""
+        self._lost.add(int(rank))
+
+    def rejoin_rank(self, rank: int) -> None:
+        self._lost.discard(int(rank))
+
+    def leader_rank(self) -> int:
+        import jax
+        alive = [r for r in range(jax.process_count())
+                 if r not in self._lost]
+        if not alive:
+            raise RuntimeError("no surviving rank to lead")
+        return alive[0]
+
+    def is_leader(self) -> bool:
+        import jax
+        return jax.process_index() == self.leader_rank()
 
     # split out for the unit tests (exercised without a multi-host run)
     def _encode(self, local: ProfileStore) -> bytes:
@@ -159,35 +287,36 @@ class ProcessAllGatherAggregator:
                     for i in range(gathered.shape[0]) if i != me]
         return self._merge_payloads(local, payloads)
 
-    def is_leader(self) -> bool:
-        import jax
-        return jax.process_index() == 0
-
     def broadcast(self, obj):
         """COLLECTIVE broadcast of the leader's JSON-serializable
         directive (None included) to every process.  Non-leaders' ``obj``
-        is ignored.  Two rounds because broadcast wants equal shapes: the
-        payload length first, then the payload itself.  The
-        single-process shortcut still round-trips through JSON, so a
-        directive behaves identically on and off the wire (a value JSON
-        would mutate or reject cannot pass single-process runs and then
-        surprise a real mesh)."""
+        is ignored.  Implemented as allgather-then-select-the-leader's
+        payload so it works from WHICHEVER rank currently leads
+        (``broadcast_one_to_all`` roots at process 0 only).  Two rounds
+        because collectives want equal shapes: the payload lengths first,
+        then the length-padded payloads.  The single-process shortcut
+        still round-trips through JSON, so a directive behaves
+        identically on and off the wire (a value JSON would mutate or
+        reject cannot pass single-process runs and then surprise a real
+        mesh)."""
         import jax
         if jax.process_count() == 1:
             return None if obj is None else json.loads(json.dumps(obj))
         import numpy as np
         from jax.experimental import multihost_utils
+        leader = self.leader_rank()
         payload = (json.dumps(obj).encode("utf-8")
                    if self.is_leader() and obj is not None else b"")
-        n = int(multihost_utils.broadcast_one_to_all(
-            np.asarray([len(payload)], dtype=np.int64))[0])
+        arr = np.frombuffer(payload, dtype=np.uint8)
+        lengths = multihost_utils.process_allgather(
+            np.asarray([arr.size], dtype=np.int64))
+        n = int(lengths[leader])
         if n == 0:
             return None
-        buf = np.zeros(n, dtype=np.uint8)
-        if self.is_leader():
-            buf[:] = np.frombuffer(payload, dtype=np.uint8)
-        out = multihost_utils.broadcast_one_to_all(buf)
-        return json.loads(bytes(np.asarray(out)).decode("utf-8"))
+        padded = np.zeros(int(np.max(lengths)), dtype=np.uint8)
+        padded[:arr.size] = arr
+        gathered = multihost_utils.process_allgather(padded, tiled=False)
+        return json.loads(bytes(gathered[leader, :n]).decode("utf-8"))
 
 
 def default_aggregator():

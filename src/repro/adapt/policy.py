@@ -109,7 +109,8 @@ class AdaptDecision:
 class AdaptEvent:
     """One structured line of the controller's operator-facing log.
 
-    ``action`` ∈ {"trigger", "replan", "migrate", "skip"}:
+    ``action`` ∈ {"trigger", "replan", "migrate", "skip",
+                  "node-lost", "node-joined", "re-elect"}:
       trigger — the policy fired (detail: signal, stage, factor);
       replan  — a plan search ran (detail: winner, iter_time,
                 baseline_time, expected_gain);
@@ -119,6 +120,19 @@ class AdaptEvent:
       skip    — the min-gain gate rejected the searched plan (detail:
                 expected_gain, min_gain), or the search found no feasible
                 plan — either way the policy enters cooldown.
+
+    Elastic-membership actions (docs/adaptation.md#elastic-membership;
+    these do NOT come from the policy — membership is a topology fact,
+    so the controller forces the replan and the ε gate does not apply):
+      node-lost   — an island left the cluster (detail: kind, the
+                    surviving groups); followed by replan + migrate onto
+                    the surviving topology;
+      node-joined — an island (re)joined (detail: kind, groups);
+                    followed by replan + migrate, restoring the plan
+                    shape the capacity allows;
+      re-elect    — THIS process became the adaptation leader after the
+                    previous leader's rank was lost (deterministic
+                    lowest-surviving-rank rule; detail: rank).
     """
     step: int
     action: str

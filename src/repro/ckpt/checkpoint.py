@@ -197,10 +197,28 @@ def _norm_layout(layout) -> Optional[Dict[str, Any]]:
         return None
     if isinstance(layout, dict):
         pp = int(layout["pp"])
-        # manifests predating per-stage tp carry no stage_tp: default to
-        # width 1 everywhere (the restack migrate runs on real layers is
-        # the identity, so the compat default is safe, never lossy)
-        tps = layout.get("stage_tp") or [1] * pp
+        if "stage_tp" not in layout:
+            # manifests predating per-stage tp carry no stage_tp KEY:
+            # default to width 1 everywhere (the restack migrate runs on
+            # real layers is the identity, so the compat default is safe,
+            # never lossy)
+            tps = [1] * pp
+        else:
+            # a PRESENT stage_tp is a post-PR-7 manifest and must be
+            # well-formed: an empty or wrong-length list is corruption,
+            # not legacy — silently defaulting it would migrate state
+            # under the wrong tp widths
+            tps = layout["stage_tp"]
+            try:
+                ok = (isinstance(tps, (list, tuple)) and len(tps) == pp
+                      and all(int(x) >= 1 for x in tps))
+            except (TypeError, ValueError):
+                ok = False
+            if not ok:
+                raise ValueError(
+                    f"malformed stage_tp {tps!r} in layout (pp={pp}): "
+                    f"expected {pp} widths >= 1, or no stage_tp key at "
+                    f"all for a pre-stage_tp legacy manifest")
         return {"pp": pp, "vpp": int(layout["vpp"]),
                 "virtual_layers": [int(x) for x in layout["virtual_layers"]],
                 "stage_tp": [int(x) for x in tps]}

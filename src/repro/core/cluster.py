@@ -36,12 +36,35 @@ class DeviceType:
     mfu: float                  # measured homogeneous-cluster MFU (0..1)
     hbm_gb: float = 64.0
     hbm_gbps: float = 1600.0
+    # degradation provenance: the HEALTHY homogeneous MFU this device was
+    # constructed with.  ``ClusterSpec.degrade`` stamps it on first
+    # application so repeated degradations REPLACE (relative to health)
+    # instead of composing on the already-degraded ``mfu`` — the factor^2
+    # double-count class.  None = ``mfu`` IS the healthy baseline.
+    base_mfu: Optional[float] = None
 
     @property
     def effective_tflops(self) -> float:
         """Achievable per-accelerator throughput = peak x homogeneous MFU
         (the paper's Eq.2 calibration)."""
         return self.peak_tflops * self.mfu
+
+    @property
+    def healthy_mfu(self) -> float:
+        """The MFU before any ``degrade`` was applied."""
+        return self.base_mfu if self.base_mfu is not None else self.mfu
+
+    @property
+    def slowdown(self) -> float:
+        """Currently applied degradation factor vs health (1.0 = healthy)."""
+        return self.healthy_mfu / self.mfu if self.mfu > 0 else 1.0
+
+    def to_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "DeviceType":
+        return cls(**d)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +78,30 @@ class NodeGroup:
     @property
     def n_accel(self) -> int:
         return self.n_nodes * self.accel_per_node
+
+    @property
+    def healthy(self) -> "NodeGroup":
+        """The same island at its healthy (pre-degrade) rating — what a
+        replacement node joining the cluster actually provides."""
+        if self.device.base_mfu is None:
+            return self
+        return dataclasses.replace(
+            self, device=dataclasses.replace(
+                self.device, mfu=self.device.healthy_mfu, base_mfu=None))
+
+    def to_dict(self) -> Dict[str, object]:
+        """JSON-able form (the ``node-joined`` directive wire format)."""
+        return {"device": self.device.to_dict(), "n_nodes": self.n_nodes,
+                "accel_per_node": self.accel_per_node,
+                "intra_node_gbps": self.intra_node_gbps}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "NodeGroup":
+        return cls(device=DeviceType.from_dict(dict(d["device"])),
+                   n_nodes=int(d["n_nodes"]),
+                   accel_per_node=int(d.get("accel_per_node", 8)),
+                   intra_node_gbps=float(
+                       d.get("intra_node_gbps", 300.0 * 8)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,19 +143,64 @@ class ClusterSpec:
         detects sustained degradation, the caller builds the degraded spec,
         and ``Trainer.replan`` re-searches against it — scaling any
         *observed* profile entries of that kind by the same factor
-        (tests/test_replan.py)."""
+        (tests/test_replan.py).
+
+        ``factor`` is ABSOLUTE — "this kind runs ``factor``x slower than
+        healthy" — and repeated application REPLACES rather than
+        composes: the device tracks its healthy baseline (``base_mfu``)
+        and the applied slowdown is ``max(current, factor)``, matching
+        the trainer's max-not-compose rule for observation scales.  A
+        replayed or re-estimated directive therefore never double-counts
+        into factor^2."""
         if factor <= 0:
             raise ValueError(f"degrade factor must be > 0, got {factor}")
         if all(g.device.name != device_kind for g in self.groups):
             known = sorted({g.device.name for g in self.groups})
             raise ValueError(f"unknown device kind {device_kind!r}; "
                              f"cluster has {known}")
+
+        def deg(d: DeviceType) -> DeviceType:
+            applied = max(d.slowdown, factor)
+            return dataclasses.replace(d, mfu=d.healthy_mfu / applied,
+                                       base_mfu=d.healthy_mfu)
+
         groups = tuple(
-            dataclasses.replace(
-                g, device=dataclasses.replace(g.device,
-                                              mfu=g.device.mfu / factor))
+            dataclasses.replace(g, device=deg(g.device))
             if g.device.name == device_kind else g
             for g in self.groups)
+        return dataclasses.replace(self, groups=groups)
+
+    # --------------------------------------------- membership edits --------
+    def remove_group(self, device_kind: str) -> "ClusterSpec":
+        """Membership edit: the same cluster without ``device_kind``'s
+        island (node loss).  Raises on an unknown kind and on removing
+        the last island — an empty cluster is not a topology the planner
+        can place anything on.  NOTE: group INDICES shift (``.groups`` is
+        positional), so plans referencing the old cluster must be
+        re-searched, never re-indexed (Trainer drops the incumbent as the
+        search baseline across a membership change)."""
+        if all(g.device.name != device_kind for g in self.groups):
+            known = sorted({g.device.name for g in self.groups})
+            raise ValueError(f"unknown device kind {device_kind!r}; "
+                             f"cluster has {known}")
+        groups = tuple(g for g in self.groups
+                       if g.device.name != device_kind)
+        if not groups:
+            raise ValueError(
+                f"removing {device_kind!r} would leave an empty cluster")
+        return dataclasses.replace(self, groups=groups)
+
+    def add_group(self, group: NodeGroup) -> "ClusterSpec":
+        """Membership edit: append an island (node join).  Joining a kind
+        already present is replace-not-compose, like ``degrade``: the
+        existing island is swapped for the incoming one (a rejoining node
+        arrives healthy; stacking a second island of the same kind would
+        double its capacity on every rejoin of a flapping node)."""
+        if any(g.device.name == group.device.name for g in self.groups):
+            groups = tuple(group if g.device.name == group.device.name
+                           else g for g in self.groups)
+        else:
+            groups = self.groups + (group,)
         return dataclasses.replace(self, groups=groups)
 
     def link_gbps(self, ga: int, gb: int, transport: str = "gpu") -> float:

@@ -21,6 +21,13 @@ no replan call in this driver.  Every decision prints as a structured
 AdaptEvent line (docs/adaptation.md is the runbook).  Multi-process runs
 aggregate per-pod telemetry automatically (repro.adapt.default_aggregator)
 — no extra flags.
+
+``--lose KIND@STEP`` / ``--join KIND@STEP`` inject elastic MEMBERSHIP
+events: the named island leaves (or rejoins) the cluster mid-run, the
+controller forces a replan onto the edited topology (dp-width and
+pp-depth changes included) and live-migrates the state — no process
+restart.  Both are repeatable, so ``--lose gpu-a@6 --join gpu-a@12``
+exercises a full lose/re-elect/replan/rejoin round trip.
 """
 from __future__ import annotations
 
@@ -60,6 +67,25 @@ def degrade_spec(text: str):
     return kind, factor, step
 
 
+def membership_spec(text: str):
+    """Validated ``--lose``/``--join`` value: KIND@STEP -> (kind, step).
+    The step is mandatory — a membership event is a scheduled fact, not a
+    half-the-run default."""
+    err = argparse.ArgumentTypeError(
+        f"expected KIND@STEP (e.g. gpu-a@6), got {text!r}")
+    kind, sep, at = text.partition("@")
+    if not kind or not sep:
+        raise err
+    try:
+        step = int(at)
+    except ValueError:
+        raise err from None
+    if step < 0:
+        raise argparse.ArgumentTypeError(
+            f"membership @STEP must be >= 0, got {at!r}")
+    return kind, step
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b",
@@ -86,6 +112,18 @@ def main():
                          "STEP: half the steps) -> live replan + migration "
                          "(needs --pp); with --adapt the injection only "
                          "distorts telemetry and the controller reacts")
+    ap.add_argument("--lose", type=membership_spec, action="append",
+                    default=[], metavar="KIND@STEP",
+                    help="membership event: island KIND leaves the "
+                         "cluster at STEP — the controller forces a "
+                         "replan onto the survivors and live-migrates, "
+                         "no restart (needs --pp; repeatable)")
+    ap.add_argument("--join", type=membership_spec, action="append",
+                    default=[], metavar="KIND@STEP",
+                    help="membership event: island KIND (re)joins at "
+                         "STEP — restores the healthy spec remembered by "
+                         "an earlier --lose and replans back onto it "
+                         "(needs --pp; repeatable)")
     ap.add_argument("--adapt", action="store_true",
                     help="autonomous adaptation: the repro.adapt policy "
                          "watches telemetry and replans/migrates itself")
@@ -164,8 +202,20 @@ def main():
         degrade_kind, degrade_factor, degrade_step = args.degrade
         if degrade_step is None:
             degrade_step = args.steps // 2
+    membership = sorted(
+        [(step, "lost", kind) for kind, step in args.lose]
+        + [(step, "joined", kind) for kind, step in args.join])
+    if membership and not args.pp:
+        ap.error("--lose/--join need --pp (a cluster to edit)")
     policy = aggregator = None
-    adapt_kw = {}
+    # membership replans search the SAME constrained space as the initial
+    # plan even without --adapt — the forced replan must not wander into
+    # shapes the operator ruled out up front — EXCEPT pipeline depth: a
+    # lost island can leave too few accelerators for the configured pp,
+    # so the controller may go shallower (and back up on a rejoin)
+    adapt_kw = dict(search_kw) if args.pp else {}
+    if args.pp:
+        adapt_kw["pp_options"] = list(range(1, args.pp + 1))
     if args.adapt:
         from repro.adapt import AdaptConfig, ReplanPolicy, default_aggregator
         exit_ = args.adapt_exit or args.adapt_enter * (
@@ -177,7 +227,6 @@ def main():
         # multi-pod telemetry aggregation needs no extra flags: identity on
         # one process, process_allgather fan-in on a real multi-host mesh
         aggregator = default_aggregator()
-        adapt_kw = dict(search_kw)
     obs = None
     if args.trace_out or args.metrics_out or args.events_out \
             or args.prom_out:
@@ -210,9 +259,13 @@ def main():
     try:
         while done < args.steps:
             chunk = min(args.log_every, args.steps - done)
-            if degrade_step is not None and \
-                    done < degrade_step < done + chunk:
-                chunk = degrade_step - done  # land on the injection step
+            # land each chunk boundary on the next injection step
+            inject_steps = ([degrade_step]
+                            if degrade_step is not None else [])
+            inject_steps += [s for s, _, _ in membership]
+            for s in inject_steps:
+                if done < s < done + chunk:
+                    chunk = s - done
             r = t.run(chunk)
             done += chunk
             dt = time.time() - t0
@@ -238,6 +291,15 @@ def main():
                           f"{degrade_factor} -> replanned: "
                           f"{plan.describe()} (migrations={t.migrations})")
                 degrade_kind = None
+            while membership and done >= membership[0][0]:
+                _, op, kind = membership.pop(0)
+                if op == "lost":
+                    t.lose_node(kind)
+                else:
+                    t.join_node(kind)
+                print(f"[train] membership: island {kind} {op} at step "
+                      f"{t.step} — controller replans on the new "
+                      f"topology")
             for ev in t.adapt_log[printed_events:]:
                 print(ev.format())
             printed_events = len(t.adapt_log)
@@ -254,7 +316,7 @@ def main():
             obs.close()
     print(json.dumps({"final_loss": r["losses"][-1], "steps": t.step,
                       "params_m": round(n_params / 1e6, 1),
-                      "replans": t.replans,
+                      "replans": t.replans, "migrations": t.migrations,
                       "adapt_events": [e.to_dict() for e in t.adapt_log]}))
 
 

@@ -1,14 +1,16 @@
 """Unified run observability (ISSUE 6): predicted-vs-observed timeline
 tracing, an append-only metrics stream, and a flight recorder for the
 adaptation loop.  See docs/observability.md for the operator runbook."""
-from repro.obs.flight import FlightRecorder, install_sigterm
+from repro.obs.flight import (FlightRecorder, install_sigterm,
+                              uninstall_sigterm)
 from repro.obs.metrics import MetricsLog, read_jsonl
 from repro.obs.observer import Observability
 from repro.obs.runmeta import RunMeta, new_run_id, plan_digest
 from repro.obs.trace import TraceBuilder, predicted_sim_events
 
 __all__ = [
-    "FlightRecorder", "install_sigterm", "MetricsLog", "read_jsonl",
+    "FlightRecorder", "install_sigterm", "uninstall_sigterm",
+    "MetricsLog", "read_jsonl",
     "Observability", "RunMeta", "new_run_id", "plan_digest",
     "TraceBuilder", "predicted_sim_events",
 ]

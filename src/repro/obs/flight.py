@@ -73,11 +73,33 @@ class FlightRecorder:
         return path
 
 
+# the (recorder, path, handler, prev) this module last installed — the
+# idempotence/uninstall bookkeeping below.  One slot suffices: a process
+# has one SIGTERM handler, so there is never more than one live install.
+_installed: Optional[tuple] = None
+
+
 def install_sigterm(recorder: FlightRecorder, path) -> None:
     """Dump the ring on SIGTERM, then chain the previous handler (or
     re-raise the default termination) — the process still dies, but the
-    last ~recorder.capacity decisions survive it."""
-    prev = signal.getsignal(signal.SIGTERM)
+    last ~recorder.capacity decisions survive it.
+
+    IDEMPOTENT per (recorder, path): re-installing the same pair is a
+    no-op, and installing a different pair REPLACES this module's handler
+    (chaining to whatever preceded it) instead of chaining onto it —
+    repeated Trainer runs in one process must not build an unbounded
+    handler chain that double-dumps on every signal.  Handlers installed
+    by OTHER code after ours are still chained normally.  Use
+    ``uninstall_sigterm`` for test teardown."""
+    global _installed
+    path = Path(path)
+    current = signal.getsignal(signal.SIGTERM)
+    if _installed is not None and current is _installed[2]:
+        if _installed[0] is recorder and _installed[1] == path:
+            return                    # same (recorder, path): no-op
+        prev = _installed[3]          # replace our handler, keep ITS prev
+    else:
+        prev = current                # foreign handler: chain it
 
     def _handler(signum, frame):
         try:
@@ -90,3 +112,21 @@ def install_sigterm(recorder: FlightRecorder, path) -> None:
                 signal.raise_signal(signal.SIGTERM)
 
     signal.signal(signal.SIGTERM, _handler)
+    _installed = (recorder, path, _handler, prev)
+
+
+def uninstall_sigterm() -> bool:
+    """Remove this module's SIGTERM handler, restoring whatever it had
+    chained (test teardown).  Returns True when a handler was removed;
+    False when none was installed — or when other code has since replaced
+    it (then it is THEIR chain to manage, and we only drop our
+    bookkeeping)."""
+    global _installed
+    if _installed is None:
+        return False
+    removed = False
+    if signal.getsignal(signal.SIGTERM) is _installed[2]:
+        signal.signal(signal.SIGTERM, _installed[3])
+        removed = True
+    _installed = None
+    return removed

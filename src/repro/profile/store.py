@@ -218,6 +218,50 @@ class ProfileStore:
             merged += 1
         return merged
 
+    # --------------------------------- membership / bounded staleness -----
+    # A departed device kind's entries are NOT dropped immediately: a
+    # flapping node that rejoins within ``keep_steps`` gets its warm
+    # profile back (no re-baseline, no planner thrash).  Past the bound
+    # the kind's entries are stale — ``drop_device`` removes them from
+    # planning for good.  The marks live in ``meta`` so they persist
+    # through save/load with the entries they govern.
+
+    def mark_departed(self, device_kind: str, step: int) -> None:
+        """Record that ``device_kind`` left the cluster at ``step`` (its
+        entries enter the bounded-staleness window).  Re-marking an
+        already-departed kind keeps the ORIGINAL departure step: a flap
+        must not keep resetting its own staleness clock."""
+        self.meta.setdefault("departed", {}).setdefault(
+            device_kind, int(step))
+
+    def mark_rejoined(self, device_kind: str) -> bool:
+        """Clear a departure mark (the kind is back; its kept entries
+        serve again).  Returns whether a mark existed."""
+        return self.meta.get("departed", {}).pop(device_kind, None) \
+            is not None
+
+    def departed_since(self, device_kind: str) -> Optional[int]:
+        """The step ``device_kind`` departed at, or None if present."""
+        v = self.meta.get("departed", {}).get(device_kind)
+        return int(v) if v is not None else None
+
+    def stale_kinds(self, now_step: int, keep_steps: int) -> List[str]:
+        """Departed kinds whose staleness bound has passed (departed more
+        than ``keep_steps`` steps ago) — due for ``drop_device``."""
+        return sorted(k for k, s in self.meta.get("departed", {}).items()
+                      if now_step - int(s) > keep_steps)
+
+    def drop_device(self, device_kind: str) -> int:
+        """Remove every entry of ``device_kind`` (and its departure
+        mark): the bounded-staleness expiry.  Returns how many entries
+        were dropped."""
+        doomed = [k for k, e in self._entries.items()
+                  if e.device_kind == device_kind]
+        for k in doomed:
+            del self._entries[k]
+        self.meta.get("departed", {}).pop(device_kind, None)
+        return len(doomed)
+
     # ----------------------------------------------------------- read -----
     def get(self, device_kind: str, op: str,
             shape: Dict[str, Any]) -> Optional[Entry]:

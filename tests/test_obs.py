@@ -44,7 +44,7 @@ from repro.iccl import communicator
 from repro.models import registry
 from repro.obs import (FlightRecorder, MetricsLog, Observability, RunMeta,
                        TraceBuilder, install_sigterm, plan_digest,
-                       predicted_sim_events, read_jsonl)
+                       predicted_sim_events, read_jsonl, uninstall_sigterm)
 from repro.obs.report import RunMismatch, build_report
 from repro.profile.store import ProfileStore
 from repro.telemetry import StageTelemetry
@@ -270,6 +270,57 @@ def test_sigterm_handler_dumps_then_chains(tmp_path):
     doc = json.loads((tmp_path / "flight.json").read_text())
     assert doc["reason"] == "sigterm"
     assert chained == [signal.SIGTERM]              # previous handler ran
+
+
+def test_install_sigterm_idempotent_per_recorder_and_path(tmp_path):
+    """Repeated Trainer runs in one process re-install the handler: the
+    same (recorder, path) pair is a no-op, a DIFFERENT pair replaces our
+    handler (chaining what preceded it, never itself) — the chain stays
+    depth one, so one SIGTERM dumps exactly once."""
+    chained = []
+    prev = signal.getsignal(signal.SIGTERM)
+    signal.signal(signal.SIGTERM, lambda s, f: chained.append(s))
+    try:
+        fr = FlightRecorder(capacity=8)
+        fr.note("step", step=1)
+        install_sigterm(fr, tmp_path / "a.json")
+        h1 = signal.getsignal(signal.SIGTERM)
+        install_sigterm(fr, tmp_path / "a.json")    # same pair: no-op
+        assert signal.getsignal(signal.SIGTERM) is h1
+        # different pair: REPLACES (a chain of our own handlers would
+        # dump twice per signal); the foreign chained handler is kept
+        fr2 = FlightRecorder(capacity=8)
+        fr2.note("step", step=2)
+        install_sigterm(fr2, tmp_path / "b.json")
+        h2 = signal.getsignal(signal.SIGTERM)
+        assert h2 is not h1
+        h2(signal.SIGTERM, None)
+        assert not (tmp_path / "a.json").exists()   # old pair is gone
+        assert json.loads(
+            (tmp_path / "b.json").read_text())["reason"] == "sigterm"
+        assert chained == [signal.SIGTERM]          # foreign ran ONCE
+    finally:
+        signal.signal(signal.SIGTERM, prev)
+        uninstall_sigterm()                         # clear bookkeeping
+
+
+def test_uninstall_sigterm_restores_chain(tmp_path):
+    prev = signal.getsignal(signal.SIGTERM)
+    marker = lambda s, f: None                      # noqa: E731
+    signal.signal(signal.SIGTERM, marker)
+    try:
+        assert uninstall_sigterm() is False         # nothing installed
+        install_sigterm(FlightRecorder(capacity=2), tmp_path / "f.json")
+        assert signal.getsignal(signal.SIGTERM) is not marker
+        assert uninstall_sigterm() is True
+        assert signal.getsignal(signal.SIGTERM) is marker  # chain intact
+        # foreign code replaced our handler since: their chain to manage
+        install_sigterm(FlightRecorder(capacity=2), tmp_path / "g.json")
+        signal.signal(signal.SIGTERM, marker)
+        assert uninstall_sigterm() is False
+        assert signal.getsignal(signal.SIGTERM) is marker
+    finally:
+        signal.signal(signal.SIGTERM, prev)
 
 
 # ----------------------------------------------------------- events / off --

@@ -1,0 +1,90 @@
+#!/usr/bin/env python3
+"""Validate the elastic-membership smoke run (CI tier-2 gate).
+
+    python tools/validate_elastic.py --events E.jsonl [--run-log RUN.log]
+
+Checks, without any third-party dependency, that the node-loss/rejoin
+smoke actually exercised the elastic path:
+
+  * the events JSONL contains a ``node-lost`` AND a ``node-joined``
+    adapt event, each preceded by its forced ``replan``;
+  * at least two ``migrate`` events (one per membership edit);
+  * with ``--run-log``: the driver's final JSON summary (last line)
+    reports ``migrations.memory >= 2`` and ``migrations.checkpoint == 0``
+    — both edits were absorbed in memory, no restart.
+
+Exit 0 on pass; exit 1 with one line per violation on fail.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def _load_events(path):
+    events = []
+    for line in Path(path).read_text().splitlines():
+        if not line.strip():
+            continue
+        rec = json.loads(line)
+        if rec.get("kind") == "adapt_event":
+            events.append(rec)
+    return events
+
+
+def validate(events_path, run_log=None):
+    errors = []
+    events = _load_events(events_path)
+    actions = [e.get("action") for e in events]
+    for want in ("node-lost", "node-joined"):
+        if want not in actions:
+            errors.append(f"events: no {want} event (actions: {actions})")
+    if actions.count("migrate") < 2:
+        errors.append(f"events: expected >= 2 migrate events, got "
+                      f"{actions.count('migrate')} (actions: {actions})")
+    # each membership edit is a FORCED replan: the searched replan event
+    # must precede its node-lost / node-joined application
+    for member in ("node-lost", "node-joined"):
+        if member in actions:
+            i = actions.index(member)
+            if "replan" not in actions[:i]:
+                errors.append(f"events: {member} not preceded by a "
+                              f"replan (actions: {actions})")
+    if run_log:
+        last = Path(run_log).read_text().strip().splitlines()[-1]
+        try:
+            summary = json.loads(last)
+        except Exception as e:  # noqa: BLE001
+            errors.append(f"run-log: last line is not the JSON summary: "
+                          f"{e}")
+        else:
+            mig = summary.get("migrations", {})
+            if mig.get("memory", 0) < 2:
+                errors.append(f"run-log: expected >= 2 in-memory "
+                              f"migrations, got {mig}")
+            if mig.get("checkpoint", 0) != 0:
+                errors.append(f"run-log: expected 0 checkpoint-path "
+                              f"migrations (restartless), got {mig}")
+    return errors, actions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--events", required=True)
+    ap.add_argument("--run-log", default=None,
+                    help="driver stdout capture; last line must be the "
+                         "final JSON summary")
+    args = ap.parse_args(argv)
+    errors, actions = validate(args.events, args.run_log)
+    for e in errors:
+        print(f"FAIL {e}")
+    if not errors:
+        print(f"OK elastic smoke ({len(actions)} adapt events: "
+              f"{actions})")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
