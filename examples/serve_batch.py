@@ -1,10 +1,10 @@
-"""Batched serving across architecture families — dense, MoE, SSM, hybrid —
-through one API (prefill -> KV/state cache -> decode).
+"""Continuous-batching serving across architecture families — dense, MoE,
+SSM, hybrid — through one engine (prefill -> per-slot KV/state cache ->
+iteration-level batched decode).
 
     PYTHONPATH=src python examples/serve_batch.py
 """
 import sys
-import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
@@ -12,23 +12,21 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 import jax  # noqa: E402
 
 from repro.models import registry  # noqa: E402
+from repro.serve import ServeEngine, scripted_trace  # noqa: E402
 
 for arch in ("llama3-8b", "mixtral-8x7b", "falcon-mamba-7b",
              "recurrentgemma-9b"):
     b = registry.get_bundle(arch, smoke=True)
-    cfg = b.cfg
-    params = b.init(jax.random.PRNGKey(0), cfg)
-    batch = registry.make_batch(cfg, batch=4, seq=32, with_labels=False)
-    prefill = jax.jit(lambda p, bt: b.prefill(p, bt, cfg, max_len=64))
-    decode = jax.jit(lambda p, t, c: b.decode_step(p, t, c, cfg))
-    logits, cache = prefill(params, batch)
-    tok = logits.argmax(-1)[:, None].astype("int32")
-    t0 = time.perf_counter()
-    n = 16
-    for _ in range(n):
-        logits, cache = decode(params, tok, cache)
-        tok = logits.argmax(-1)[:, None].astype("int32")
-    jax.block_until_ready(tok)
-    dt = time.perf_counter() - t0
-    print(f"{arch:20s} batch=4 decoded {n} steps  "
-          f"{4 * n / dt:7.1f} tok/s (CPU, smoke config)")
+    params = b.init(jax.random.PRNGKey(0), b.cfg)
+    reqs = scripted_trace(8, vocab_size=b.cfg.vocab_size, seed=0,
+                          prompt_lens=(8, 12), gen_lens=(4, 8, 12, 16),
+                          arrival_every=1)
+    eng = ServeEngine(b, params, max_batch=4, max_len=32)
+    rep = eng.run(reqs)
+    print(f"{arch:20s} served {len(rep.completions)} requests in "
+          f"{rep.steps} steps  occupancy {rep.occupancy:.2f} "
+          f"(fixed-batch {rep.fixed_batch_occupancy:.2f})  "
+          f"{rep.decode_tok_per_s:7.1f} decode tok/s  "
+          f"ttft {1e3 * sum(rep.ttft_s) / len(rep.ttft_s):6.1f} ms  "
+          f"tpot {1e3 * sum(rep.tpot_s) / len(rep.tpot_s):5.2f} ms "
+          f"(CPU, smoke config)")

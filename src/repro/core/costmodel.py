@@ -79,6 +79,34 @@ def embedding_flops(cfg: ModelConfig) -> float:
     return 2.0 * cfg.d_model * cfg.vocab_size
 
 
+def kv_cache_bytes(cfg: ModelConfig, batch: int, max_len: int) -> float:
+    """Decode-cache bytes for ``batch`` sequences of up to ``max_len``
+    tokens — EXACTLY the registry's real cache allocation
+    (``ArchBundle.init_cache(batch, max_len)`` summed over array leaves,
+    minus the position index), per arch family:
+
+      attn   2 * min(max_len, window) * n_kv_heads * hd       x adtype
+      ssm    d_inner * ssm_state x fp32  +  (K-1) * d_inner   x adtype
+      rec    lru_width x fp32            +  (K-1) * lru_width x adtype
+      encdec per decoder layer: self-KV (max_len) + cross-KV (max_len)
+
+    tests/test_serve.py locks the equality for every family, so the
+    serving-mode ``peak_memory`` / ``require_fit`` stay honest."""
+    a = cfg.adtype.itemsize
+    if cfg.family == "encdec":
+        per = 4.0 * max_len * cfg.n_kv_heads * cfg.hd * a  # self + cross
+        return float(batch) * cfg.num_layers * per
+    S = min(max_len, cfg.window) if cfg.window else max_len
+    per_kind = {
+        "attn": 2.0 * S * cfg.n_kv_heads * cfg.hd * a,
+        "ssm": (cfg.d_inner * cfg.ssm_state * 4.0
+                + (cfg.ssm_conv - 1) * cfg.d_inner * a),
+        "rec": (cfg.lru_width_ * 4.0
+                + (cfg.ssm_conv - 1) * cfg.lru_width_ * a),
+    }
+    return float(batch) * sum(per_kind[k] for k in cfg.layer_kinds())
+
+
 @dataclasses.dataclass(frozen=True)
 class CommVolume:
     """Per-microbatch communication volumes in bytes."""

@@ -62,8 +62,10 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core import costmodel, fastsim, segmentation, simulator
 from repro.core.cluster import ClusterSpec
-from repro.core.plan import ParallelPlan, StagePlacement
-from repro.core.predictor import PerformancePredictor, Prediction
+from repro.core.plan import (ParallelPlan, ServingPlan, ServingSLO,
+                             StagePlacement, TrafficProfile)
+from repro.core.predictor import (GBPS, PerformancePredictor, Prediction,
+                                  ServeLoad)
 from repro.models.config import ModelConfig
 
 DEFAULT_EAGER_SLACKS = (1, 2, 4)
@@ -596,3 +598,171 @@ def _search_reference(cluster: ClusterSpec, cfg: ModelConfig, *,
         raise RuntimeError("planner found no feasible plan (memory/divisibility)")
     return PlannerResult(plan=best[1], prediction=best[0],
                          evaluated=evaluated, log=tuple(log))
+
+
+# ----------------------------------------------------------- serving -------
+@dataclasses.dataclass(frozen=True)
+class ServingPrediction:
+    """What the serving planner expects of a placement: first-token and
+    per-output-token latencies, the sustainable request rate, per-role
+    peak memory, and the normalized SLO score max(ttft/slo, tpot/slo)
+    (<= 1 means both budgets are met)."""
+    ttft_s: float
+    tpot_s: float
+    request_capacity: float    # req/s the placement sustains
+    slo_score: float
+    prefill_mem_gb: float
+    decode_mem_gb: float
+    fits: bool
+
+    def to_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingPlanResult:
+    plan: ServingPlan
+    predicted: ServingPrediction
+    evaluated: int
+    log: Tuple[Tuple[str, float], ...]  # (plan description, slo_score)
+
+
+def _decode_step_time(pred: PerformancePredictor, group: int, cfg: ModelConfig,
+                      batch: int, tp: int, max_len: int) -> float:
+    """One continuous-batching decode step on ``group``: the max of the
+    compute roofline (1 token x batch through the stack, CostSource-aware
+    via stage_coeffs at seq_len=1) and the HBM roofline — decode streams
+    the whole parameter set plus the live KV/state cache every step, which
+    is what makes a memory-bandwidth-rich island win the decode role."""
+    c = pred.stage_coeffs(group, batch, tp, 1, True, None, 1)
+    compute = c.fwd_per_layer * cfg.num_layers + c.fwd_const
+    lc = pred.src.layer_cost(cfg, max_len)
+    # cache occupancy averages half max_len over a sequence's lifetime
+    kv = costmodel.kv_cache_bytes(cfg, batch, max_len) / 2.0
+    stream_bytes = (lc.param_bytes * cfg.num_layers + kv) / tp
+    hbm_bw = pred.cluster.groups[group].device.hbm_gbps * 1e9
+    return max(compute, stream_bytes / hbm_bw)
+
+
+def plan_serving(cluster: ClusterSpec, cfg: ModelConfig, *,
+                 slo: ServingSLO, traffic: TrafficProfile,
+                 max_len: Optional[int] = None,
+                 tp_options: Sequence[int] = (1, 2, 4, 8),
+                 decode_batch_options: Sequence[int] = (4, 8, 16, 32, 64),
+                 calibration: float = 1.0, include_tp_comm: bool = True,
+                 cost_source: Optional[costmodel.CostSource] = None,
+                 require_fit: bool = True,
+                 transport: str = "gpu") -> ServingPlanResult:
+    """Search disaggregated prefill/decode placements under the latency
+    SLO — the serving analogue of ``search``.
+
+    Candidates assign the prefill role to one island and the decode role
+    to another (or the same — colocated), sweeping per-role tp and the
+    continuous-batching slot count.  Prefill time reuses the training
+    predictor's ``stage_coeffs`` (so a ``ProfiledCostModel``'s measured
+    per-layer wall times drive it); decode steps are scored on the HBM
+    roofline (``_decode_step_time``).  Disaggregated candidates pay the
+    prompt KV-cache transfer over the boundary link inside TTFT;
+    colocated candidates pay a prefill-interference duty cycle on TPOT.
+    Feasibility = per-role ``peak_memory(serve=...)`` fit (when
+    ``require_fit``) + request-rate capacity >= the traffic's offered
+    rate.  The winner minimizes (SLO violated?, slo_score, -capacity):
+    every SLO-meeting plan beats every violating one, then the lowest
+    normalized latency wins, capacity breaking ties."""
+    if max_len is None:
+        max_len = traffic.prompt_len + traffic.gen_len
+    if traffic.prompt_len + traffic.gen_len > max_len:
+        raise ValueError(
+            f"max_len={max_len} < prompt_len + gen_len = "
+            f"{traffic.prompt_len + traffic.gen_len}")
+    src = costmodel.MemoizedCostSource(
+        cost_source or costmodel.AnalyticCostSource())
+    pred = PerformancePredictor(cluster, cfg, calibration=calibration,
+                                include_tp_comm=include_tp_comm,
+                                cost_source=src, sim_engine="fast")
+    P, G = traffic.prompt_len, traffic.gen_len
+    best = None
+    evaluated = 0
+    log: List[Tuple[str, float]] = []
+    for pg, pgroup in enumerate(cluster.groups):
+        for tp_p in tp_options:
+            if pgroup.accel_per_node % tp_p or tp_p > pgroup.n_accel:
+                continue
+            c = pred.stage_coeffs(pg, 1, tp_p, 1, True, None, P)
+            t_prefill = c.fwd_per_layer * cfg.num_layers + c.fwd_const
+            n_prefill = pgroup.n_accel // tp_p
+            mem_p = pred.peak_memory(
+                ParallelPlan(stages=(StagePlacement(
+                    pg, cfg.num_layers, 1, tp_p, is_last=True),),
+                    micro_bs=1, global_batch=1, seq_len=P,
+                    transport=transport),
+                serve=ServeLoad(batch=1, max_len=P, act_tokens=P))[0]
+            fits_p = mem_p < pgroup.device.hbm_gb
+            for dg, dgroup in enumerate(cluster.groups):
+                for tp_d in tp_options:
+                    if dgroup.accel_per_node % tp_d or tp_d > dgroup.n_accel:
+                        continue
+                    for B in decode_batch_options:
+                        evaluated += 1
+                        t_step = _decode_step_time(pred, dg, cfg, B, tp_d,
+                                                   max_len)
+                        mem_d = pred.peak_memory(
+                            ParallelPlan(stages=(StagePlacement(
+                                dg, cfg.num_layers, 1, tp_d, is_last=True),),
+                                micro_bs=1, global_batch=1, seq_len=max_len,
+                                transport=transport),
+                            serve=ServeLoad(batch=B, max_len=max_len,
+                                            act_tokens=B))[0]
+                        fits = fits_p and mem_d < dgroup.device.hbm_gb
+                        if pg == dg:
+                            # colocated: the island time-shares both roles;
+                            # prefill steals a duty-cycle fraction of
+                            # decode throughput and first tokens queue
+                            # behind the running decode step
+                            n_rep = dgroup.n_accel // max(tp_p, tp_d)
+                            duty = min(traffic.request_rate * t_prefill
+                                       / max(n_rep, 1), 0.95)
+                            ttft = t_prefill + t_step
+                            tpot = t_step / (1.0 - duty)
+                            cap_pf = n_rep / t_prefill
+                            cap_dec = n_rep * B / (t_step * G) * (1.0 - duty)
+                        else:
+                            # disaggregated: prompt KV migrates over the
+                            # boundary link into the decode island's cache
+                            n_dec = dgroup.n_accel // tp_d
+                            kv_prompt = costmodel.kv_cache_bytes(
+                                cfg, 1, min(P, max_len))
+                            bw = src.link_gbps(cluster, pg, dg, transport)
+                            ttft = (t_prefill
+                                    + kv_prompt / (bw * GBPS))
+                            tpot = t_step
+                            cap_pf = n_prefill / t_prefill
+                            cap_dec = n_dec * B / (t_step * G)
+                        capacity = min(cap_pf, cap_dec)
+                        slo_score = max(ttft / slo.ttft_s, tpot / slo.tpot_s)
+                        plan = ServingPlan(
+                            prefill_group=pg, prefill_tp=tp_p,
+                            decode_group=dg, decode_tp=tp_d,
+                            decode_batch=B, max_len=max_len,
+                            transport=transport)
+                        log.append((plan.describe(), slo_score))
+                        if require_fit and not fits:
+                            continue
+                        if capacity < traffic.request_rate:
+                            continue
+                        p = ServingPrediction(
+                            ttft_s=ttft, tpot_s=tpot,
+                            request_capacity=capacity,
+                            slo_score=slo_score,
+                            prefill_mem_gb=mem_p, decode_mem_gb=mem_d,
+                            fits=fits)
+                        key = (slo_score > 1.0, slo_score, -capacity)
+                        if best is None or key < best[0]:
+                            best = (key, plan, p)
+    if best is None:
+        raise RuntimeError(
+            "plan_serving found no feasible placement (memory fit or "
+            "request-rate capacity); relax the SLO, shrink the traffic "
+            "profile, or disable require_fit")
+    return ServingPlanResult(plan=best[1], predicted=best[2],
+                             evaluated=evaluated, log=tuple(log))

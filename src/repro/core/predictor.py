@@ -51,6 +51,17 @@ class StageCoeffs:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeLoad:
+    """Inference-time memory load for ``peak_memory(serve=...)``:
+    ``batch`` concurrent sequences of up to ``max_len`` tokens resident in
+    the decode cache, plus ``act_tokens`` live forward tokens (the prompt
+    length for a prefill stage, the decode batch for a decode stage)."""
+    batch: int
+    max_len: int
+    act_tokens: int
+
+
+@dataclasses.dataclass(frozen=True)
 class Prediction:
     iter_time: float
     tgs: float                 # tokens / accelerator / second (paper Eq.1)
@@ -347,12 +358,25 @@ class PerformancePredictor:
     def peak_memory(self, plan: ParallelPlan,
                     schedule: Optional[str] = None,
                     eager_slack: Optional[int] = None,
-                    trace: Optional[List[simulator.SimEvent]] = None
+                    trace: Optional[List[simulator.SimEvent]] = None,
+                    serve: Optional[ServeLoad] = None
                     ) -> Tuple[float, ...]:
         schedule = schedule if schedule is not None else plan.schedule
         eager_slack = (eager_slack if eager_slack is not None
                        else plan.eager_slack)
         lc = self.src.layer_cost(self.cfg, plan.seq_len)
+        if serve is not None:
+            # inference accounting: no optimizer states, no in-flight
+            # microbatch pipeline — params + the decode KV/state cache
+            # (validated bytes-exact against the registry's real cache
+            # shapes, tests/test_serve.py) + live forward activations
+            kv_per_layer = costmodel.kv_cache_bytes(
+                self.cfg, serve.batch, serve.max_len) / self.cfg.num_layers
+            return tuple(
+                (lc.param_bytes * st.n_layers / st.tp
+                 + kv_per_layer * st.n_layers / st.tp
+                 + lc.act_bytes_per_token * serve.act_tokens / st.tp) / 1e9
+                for st in plan.stages)
         # interleaved: chunk-level accounting from the executed schedule's
         # trace — the actual per-chunk in-flight mix, exact for ragged
         # chunk_layers splits (no mean-chunk approximation)

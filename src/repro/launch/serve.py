@@ -1,74 +1,141 @@
-"""Batched serving driver: prefill a request batch, decode N tokens.
+"""Continuous-batching serving driver (repro.serve engine).
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
-        --batch 4 --prompt-len 64 --gen 32
+        --requests 12 --max-batch 4 --max-len 48
+
+Replaces the seed fixed-batch driver: requests from a scripted
+mixed-length trace are admitted into the running decode batch as slots
+free up (iteration-level scheduling), TTFT and TPOT are reported
+separately with disjoint token counts, and sampling threads one PRNG
+split chain per request (the seed driver reused its first key as the
+chain root, correlating the first sample with the rest of the stream).
+
+``--plan`` additionally runs ``plan_serving`` against a demo asymmetric
+two-island cluster (compute-rich vs memory-bandwidth-rich) under the
+``--ttft-slo`` / ``--tpot-slo`` budgets, stamps the chosen placement
+into the metrics stream, and arms the traffic-drift replanner.
+
+The last stdout line is the JSON run summary (the contract
+``tools/validate_serve.py`` gates CI on).
 """
 from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import jax
-import jax.numpy as jnp
 
+from repro.core import planner
+from repro.core.cluster import ClusterSpec, DeviceType, NodeGroup
+from repro.core.plan import ServingSLO, TrafficProfile
 from repro.models import registry
+from repro.obs.metrics import MetricsLog
+from repro.obs.runmeta import RunMeta, plan_digest
+from repro.serve import DriftReplanner, ServeEngine, scripted_trace
+
+
+def demo_asymmetric_cluster() -> ClusterSpec:
+    """Compute-rich island + memory-bandwidth-rich island over an
+    RDMA-class boundary — the shape where disaggregated prefill/decode
+    placement wins (prefill is FLOPs-bound, decode HBM-bound)."""
+    compute = DeviceType("compute-rich", peak_tflops=989.0, mfu=0.5,
+                         hbm_gb=80.0, hbm_gbps=400.0)
+    membw = DeviceType("membw-rich", peak_tflops=300.0, mfu=0.45,
+                       hbm_gb=96.0, hbm_gbps=3200.0)
+    return ClusterSpec(groups=(NodeGroup(compute, 2), NodeGroup(membw, 2)),
+                       eth_gbps=400.0, eth_eff=0.9)
+
+
+def _parse_lens(text: str):
+    return tuple(int(x) for x in text.split(",") if x)
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--arch", default="llama3-8b",
-                    choices=list(registry.ARCH_IDS))
+                    choices=[a for a in registry.ARCH_IDS])
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=48)
+    ap.add_argument("--prompt-lens", type=_parse_lens, default=(8, 12, 16))
+    ap.add_argument("--gen-lens", type=_parse_lens, default=(4, 8, 12, 16))
+    ap.add_argument("--arrival-every", type=int, default=1,
+                    help="engine steps between request arrivals")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-out", default=None)
+    ap.add_argument("--prom-out", default=None)
+    ap.add_argument("--plan", action="store_true",
+                    help="run plan_serving on the demo asymmetric cluster "
+                         "and arm the traffic-drift replanner")
+    ap.add_argument("--ttft-slo", type=float, default=0.5)
+    ap.add_argument("--tpot-slo", type=float, default=0.05)
+    ap.add_argument("--request-rate", type=float, default=4.0)
+    ap.add_argument("--drift-threshold", type=float, default=1.5)
     args = ap.parse_args()
 
     b = registry.get_bundle(args.arch, smoke=args.smoke)
     cfg = b.cfg
     params = b.init(jax.random.PRNGKey(0), cfg)
-    max_len = args.prompt_len + args.gen + (
-        cfg.n_vision_tokens if cfg.family == "vlm" else 0)
-    batch = registry.make_batch(cfg, batch=args.batch, seq=args.prompt_len,
-                                with_labels=False)
+    reqs = scripted_trace(args.requests, vocab_size=cfg.vocab_size,
+                          seed=args.seed, prompt_lens=args.prompt_lens,
+                          gen_lens=args.gen_lens,
+                          arrival_every=args.arrival_every)
 
-    prefill = jax.jit(lambda p, bt: b.prefill(p, bt, cfg, max_len))
-    decode = jax.jit(lambda p, tok, c: b.decode_step(p, tok, c, cfg))
+    run = RunMeta.new(arch=cfg.name)
+    metrics = MetricsLog(path=args.metrics_out, run=run,
+                         prom_out=args.prom_out) \
+        if (args.metrics_out or args.prom_out) else None
 
-    t0 = time.time()
-    logits, cache = prefill(params, batch)
-    jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
+    slo = ServingSLO(ttft_s=args.ttft_slo, tpot_s=args.tpot_slo)
+    traffic = TrafficProfile(
+        prompt_len=round(sum(args.prompt_lens) / len(args.prompt_lens)),
+        gen_len=round(sum(args.gen_lens) / len(args.gen_lens)),
+        request_rate=args.request_rate)
+    plan_doc = None
+    replanner = None
+    if args.plan:
+        # the demo cluster is sized for the FULL config's costs — the
+        # placement search is about islands, not the smoke weights
+        plan_cfg = registry.get_config(args.arch)
+        cluster = demo_asymmetric_cluster()
+        res = planner.plan_serving(cluster, plan_cfg, slo=slo,
+                                   traffic=traffic)
+        plan_doc = {"plan": res.plan.to_dict(),
+                    "predicted": res.predicted.to_dict(),
+                    "describe": res.plan.describe(),
+                    "evaluated": res.evaluated}
+        print(f"serving plan: {res.plan.describe()}  "
+              f"ttft={res.predicted.ttft_s * 1e3:.1f}ms "
+              f"tpot={res.predicted.tpot_s * 1e3:.2f}ms "
+              f"slo_score={res.predicted.slo_score:.3f}")
+        if metrics is not None:
+            metrics.plan(0, plan_digest(res.plan), res.plan.to_dict(),
+                         res.predicted.to_dict())
 
-    def sample(lg, key):
-        if args.temperature <= 0:
-            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(key, lg / args.temperature
-                                      ).astype(jnp.int32)
+        def replan(observed: TrafficProfile):
+            return planner.plan_serving(cluster, plan_cfg, slo=slo,
+                                        traffic=observed)
 
-    key = jax.random.PRNGKey(1)
-    tok = sample(logits, key)[:, None]
-    out_tokens = [tok]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        logits, cache = decode(params, tok, cache)
-        key, sub = jax.random.split(key)
-        tok = sample(logits, sub)[:, None]
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-    gen = jnp.concatenate(out_tokens, axis=1)
-    report = {
-        "arch": cfg.name, "batch": args.batch,
-        "prompt_len": args.prompt_len, "generated": int(gen.shape[1]),
-        "prefill_s": round(t_prefill, 3),
-        "decode_tok_per_s": round(args.batch * (args.gen - 1)
-                                  / max(t_decode, 1e-9), 1),
-        "sample_output": gen[0, :8].tolist(),
-    }
-    print(json.dumps(report))
+        replanner = DriftReplanner(traffic, replan,
+                                   threshold=args.drift_threshold)
+
+    eng = ServeEngine(b, params, max_batch=args.max_batch,
+                      max_len=args.max_len, temperature=args.temperature,
+                      seed=args.seed, metrics=metrics, replanner=replanner)
+    report = eng.run(reqs)
+    if metrics is not None:
+        metrics.close()
+
+    summary = {"run_id": run.run_id, "arch": cfg.name,
+               "max_batch": args.max_batch, "max_len": args.max_len,
+               **report.to_dict()}
+    if plan_doc is not None:
+        summary["plan"] = plan_doc
+    if eng.replan_events:
+        summary["replan_events"] = eng.replan_events
+    print(json.dumps(summary))
 
 
 if __name__ == "__main__":

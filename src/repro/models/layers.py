@@ -173,16 +173,26 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
 def decode_attention(p, x, cache_k, cache_v, pos, cfg: ModelConfig):
     """One-token attention against a cache.
 
-    x: (B,1,D); cache_k/v: (B,S,Hk,hd); pos: scalar int32 (current index).
-    Returns (out (B,1,D), new_k, new_v).  For SWA the cache is a rolling
-    buffer indexed mod window.
+    x: (B,1,D); cache_k/v: (B,S,Hk,hd); pos: the current index — scalar
+    int32 (whole batch at one position, training-style decode) or (B,)
+    int32 (per-row positions, the continuous-batching serving engine:
+    every slot advances independently).  Returns (out (B,1,D), new_k,
+    new_v).  For SWA the cache is a rolling buffer indexed mod window.
     """
     B = x.shape[0]
     S = cache_k.shape[1]
     H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
-    q, k, v = _qkv(p, x, cfg, jnp.array([0]) + pos)
+    per_row = jnp.ndim(pos) == 1
+    q, k, v = _qkv(p, x, cfg,
+                   pos[:, None] if per_row else jnp.array([0]) + pos)
     slot = jnp.mod(pos, S) if cfg.window else pos
-    if cfg.cache_update == "onehot":
+    if per_row:
+        # rows write at different slots — no single dynamic_update_slice
+        # start index exists, so scatter arithmetically per row
+        oh = (jnp.arange(S)[None, :] == slot[:, None])[..., None, None]
+        ck = jnp.where(oh, k.astype(cache_k.dtype), cache_k)
+        cv = jnp.where(oh, v.astype(cache_v.dtype), cache_v)
+    elif cfg.cache_update == "onehot":
         # arithmetic scatter: elementwise over the (possibly TP-sharded) seq
         # dim — no cross-shard gather under GSPMD (used for seq-sharded
         # decode caches in the dry-run / flash-decoding path)
@@ -195,14 +205,17 @@ def decode_attention(p, x, cache_k, cache_v, pos, cfg: ModelConfig):
         cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
                                           (0, slot, 0, 0))
     kpos_abs = jnp.arange(S)
+    # (B,1) per-row / scalar shared: the same mask algebra broadcasts to
+    # (B,S) or (S,) respectively
+    pcol = pos[:, None] if per_row else pos
     if cfg.window:
         # rolling buffer: entry i holds absolute position with i = abs % S
-        n_wrap = (pos // S) * S
-        kabs = kpos_abs + jnp.where(kpos_abs <= jnp.mod(pos, S), n_wrap,
+        n_wrap = (pcol // S) * S
+        kabs = kpos_abs + jnp.where(kpos_abs <= jnp.mod(pcol, S), n_wrap,
                                     n_wrap - S)
-        valid = (kabs >= 0) & (kabs <= pos) & (kabs > pos - cfg.window)
+        valid = (kabs >= 0) & (kabs <= pcol) & (kabs > pcol - cfg.window)
     else:
-        valid = kpos_abs <= pos
+        valid = kpos_abs <= pcol
     G = H // Hk
     qg = q.reshape(B, 1, Hk, G, hd)
     s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ck,
@@ -210,7 +223,8 @@ def decode_attention(p, x, cache_k, cache_v, pos, cfg: ModelConfig):
     if cfg.attn_logit_softcap:
         c = cfg.attn_logit_softcap
         s = c * jnp.tanh(s / c)
-    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+    s = jnp.where(valid[:, None, None, None, :] if per_row
+                  else valid[None, None, None, None, :], s, -1e30)
     w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", w, cv,
                    preferred_element_type=jnp.float32).astype(x.dtype)

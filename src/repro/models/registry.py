@@ -31,11 +31,32 @@ _MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_")
             for a in ARCH_IDS}
 
 
+def check_last_logits(logits, batch: int, vocab: int,
+                      where: str = "prefill"):
+    """Serving contract: ``prefill`` and ``decode_step`` return
+    LAST-position logits of shape (B, V) — never the full-sequence
+    (B, S, V) that ``forward`` returns.  Every family in the registry
+    satisfies it (transformer.lm_prefill slices ``x[:, -1:]``, encdec
+    likewise), and the serving engine asserts it once per compiled
+    function so a new arch entry can't silently hand full-sequence logits
+    to the sampler (which would argmax over vocab at EVERY position and
+    emit position-0's token)."""
+    shape = tuple(getattr(logits, "shape", ()))
+    if shape != (batch, vocab):
+        raise ValueError(
+            f"{where} logits must be last-position (batch, vocab) = "
+            f"{(batch, vocab)}, got {shape} — full-sequence (B, S, V) "
+            f"logits violate the registry serving contract")
+    return logits
+
+
 @dataclasses.dataclass(frozen=True)
 class ArchBundle:
     cfg: ModelConfig
     init: Callable[..., Any]
     forward: Callable[..., Any]       # (params, batch, cfg) -> (logits, aux)
+    # serving contract (check_last_logits): both return (B, V) logits of
+    # the LAST position only
     prefill: Callable[..., Any]       # (params, batch, cfg, max_len) -> (logits, cache)
     decode_step: Callable[..., Any]   # (params, token, cache, cfg) -> (logits, cache)
 

@@ -1,0 +1,19 @@
+"""Heterogeneous continuous-batching serving (HETHUB at inference time).
+
+The planner/predictor/telemetry loop applied to serving: an
+iteration-level scheduler (``engine``) admits requests into the running
+decode batch every step, ``core.planner.plan_serving`` places the
+prefill/decode roles across heterogeneous islands under a latency SLO,
+and the engine's TTFT/TPOT/occupancy telemetry feeds a traffic-drift
+replan signal (``DriftReplanner``).
+"""
+from repro.serve.engine import (Completion, DriftReplanner, Request,
+                                ServeEngine, ServeReport,
+                                decode_sequential, fixed_batch_occupancy)
+from repro.serve.trace import scripted_trace
+
+__all__ = [
+    "Completion", "DriftReplanner", "Request", "ServeEngine",
+    "ServeReport", "decode_sequential", "fixed_batch_occupancy",
+    "scripted_trace",
+]

@@ -1,0 +1,523 @@
+"""Continuous-batching serving engine (iteration-level scheduling).
+
+One decode batch of ``max_batch`` slots runs forever; every engine step
+(1) admits queued requests into free slots — each admission is a
+batch-1 prefill whose cache row is spliced into the running batch at a
+per-slot position (the vector-``pos`` decode path in models/layers.py),
+(2) advances ALL active slots one token in a single batched
+``decode_step``, and (3) evicts finished sequences, freeing their slots
+for the next admission.  Occupancy therefore tracks the offered load
+instead of collapsing to the slowest request of a fixed batch.
+
+Correctness contract (locked by tests/test_serve.py): a request's token
+stream is bit-identical to decoding it ALONE at batch 1
+(``decode_sequential``) for the dense / ssm / hybrid families — the
+per-row cache slots make batched decode exactly row-separable.  MoE is
+the one exception: XLA fuses the ``lax.scan`` block body differently
+per batch width, reassociating fp32 reductions (~1e-7 relative), so
+MoE guarantees token-stream (argmax) equality rather than logits
+bit-equality — see docs/serving.md.
+
+Sampling threads one PRNG split chain per request, rooted at
+``fold_in(PRNGKey(seed), request_id)``: no key is ever reused between
+the prefill-sampled first token and the decode stream (the seed
+driver's key-reuse bug), and a request's chain is independent of what
+else shares the batch.
+
+Timing accounting: TTFT is wall-clock from a request becoming visible
+to the scheduler to its first token (queue wait + prefill + sample);
+TPOT divides each request's summed device decode-step time by its
+DECODED token count — the prefill-sampled first token is never counted
+as a decoded token, and host-side sampling time is excluded (tracked
+separately in ``ServeReport.sample_time_s``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plan import TrafficProfile
+from repro.models import registry
+
+SERVABLE_FAMILIES = ("dense", "moe", "ssm", "hybrid")
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    rid: int
+    prompt: Tuple[int, ...]
+    max_new_tokens: int
+    arrival: int = 0      # earliest engine step at which admission may occur
+
+    def __post_init__(self):
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.rid}: max_new_tokens >= 1 "
+                             f"required, got {self.max_new_tokens}")
+        if not self.prompt:
+            raise ValueError(f"request {self.rid}: empty prompt")
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    prompt_len: int
+    tokens: List[int]          # generated tokens, first one from prefill
+    ttft_s: float              # queue wait + prefill + first sample
+    decode_time_s: float       # summed device decode-step time while active
+    admitted_step: int
+    finished_step: int
+
+    @property
+    def n_decoded(self) -> int:
+        """Tokens produced by decode steps (excludes the prefill token)."""
+        return len(self.tokens) - 1
+
+    @property
+    def tpot_s(self) -> float:
+        """Per-output-token decode latency (device time, no sampling)."""
+        return self.decode_time_s / max(self.n_decoded, 1)
+
+
+@dataclasses.dataclass
+class ServeReport:
+    completions: List[Completion]
+    steps: int
+    occupancy: float             # mean active/max_batch over decode steps
+    fixed_batch_occupancy: float  # seed fixed-batch driver on the same trace
+    decode_steps: int
+    decode_time_s: float
+    prefill_time_s: float
+    sample_time_s: float
+    tokens_prefill: int          # first tokens (one per request)
+    tokens_decoded: int
+    replans: int = 0
+
+    @property
+    def decode_tok_per_s(self) -> float:
+        return self.tokens_decoded / max(self.decode_time_s, 1e-9)
+
+    @property
+    def ttft_s(self) -> List[float]:
+        return [c.ttft_s for c in self.completions]
+
+    @property
+    def tpot_s(self) -> List[float]:
+        return [c.tpot_s for c in self.completions]
+
+    def to_dict(self) -> Dict[str, Any]:
+        ttft, tpot = self.ttft_s, self.tpot_s
+        return {
+            "requests": len(self.completions),
+            "steps": self.steps,
+            "occupancy": round(self.occupancy, 4),
+            "fixed_batch_occupancy": round(self.fixed_batch_occupancy, 4),
+            "ttft_s": {"mean": round(float(np.mean(ttft)), 5),
+                       "max": round(float(np.max(ttft)), 5)} if ttft else {},
+            "tpot_s": {"mean": round(float(np.mean(tpot)), 6),
+                       "max": round(float(np.max(tpot)), 6)} if tpot else {},
+            "decode_tok_per_s": round(self.decode_tok_per_s, 1),
+            "decode_steps": self.decode_steps,
+            # the first token of every request comes from prefill, never
+            # from a decode step — the two counts are disjoint by
+            # construction (the seed driver conflated them)
+            "tokens": {"first_from_prefill": self.tokens_prefill,
+                       "decoded": self.tokens_decoded,
+                       "generated": self.tokens_prefill
+                       + self.tokens_decoded},
+            "prefill_time_s": round(self.prefill_time_s, 4),
+            "decode_time_s": round(self.decode_time_s, 4),
+            "sample_time_s": round(self.sample_time_s, 4),
+            "replans": self.replans,
+        }
+
+
+@dataclasses.dataclass
+class _Active:
+    """One occupied slot."""
+    rid: int
+    prompt_len: int
+    remaining: int
+    tokens: List[int]
+    key: jax.Array
+    next_token: int
+    decode_time_s: float
+    ttft_s: float
+    admitted_step: int
+
+
+def fixed_batch_occupancy(requests: Sequence[Request],
+                          max_batch: int) -> float:
+    """Decode-slot occupancy the SEED fixed-batch driver achieves on the
+    same trace: requests grouped in submission order into batches of
+    ``max_batch``; every group decodes until its LONGEST member finishes
+    (no mid-group refill), so short sequences idle their slots.  The
+    denominator uses each group's actual width — generous to the
+    baseline (no penalty for a ragged final group)."""
+    busy = idle_capacity = 0
+    reqs = list(requests)
+    for i in range(0, len(reqs), max_batch):
+        group = reqs[i:i + max_batch]
+        steps = max(r.max_new_tokens - 1 for r in group)
+        busy += sum(r.max_new_tokens - 1 for r in group)
+        idle_capacity += steps * len(group)
+    return busy / idle_capacity if idle_capacity else 1.0
+
+
+class ServeEngine:
+    """See module docstring.  ``metrics`` (repro.obs.metrics.MetricsLog)
+    receives queue-depth / occupancy gauges and TTFT/TPOT observations,
+    flushed once per engine step; ``replanner`` (DriftReplanner) is
+    consulted every ``replan_check_every`` completions with the observed
+    traffic profile."""
+
+    def __init__(self, bundle: registry.ArchBundle, params, *,
+                 max_batch: int, max_len: int, temperature: float = 0.0,
+                 seed: int = 0, eos_id: Optional[int] = None,
+                 metrics=None, replanner: Optional["DriftReplanner"] = None,
+                 replan_check_every: int = 4):
+        cfg = bundle.cfg
+        if cfg.family not in SERVABLE_FAMILIES:
+            raise ValueError(
+                f"ServeEngine serves token-in/token-out families "
+                f"{SERVABLE_FAMILIES}; {cfg.name} is {cfg.family!r} "
+                "(enc-dec needs a cross-attention cache and the VLM stub "
+                "an image-embed prompt — neither fits per-slot admission)")
+        if max_batch < 1:
+            raise ValueError(f"max_batch >= 1 required, got {max_batch}")
+        self.bundle = bundle
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.temperature = temperature
+        self.seed = seed
+        self.eos_id = eos_id
+        self.metrics = metrics
+        self.replanner = replanner
+        self.replan_check_every = replan_check_every
+        self.replan_events: List[Dict[str, Any]] = []
+
+        self._prefill = jax.jit(
+            lambda p, t: bundle.prefill(p, {"tokens": t}, cfg, max_len))
+        self._decode = jax.jit(
+            lambda p, t, c: bundle.decode_step(p, t, c, cfg))
+        self._insert = jax.jit(self._insert_row)
+        cache = bundle.init_cache(max_batch, max_len)
+        # per-slot positions: the vector-pos decode path advances every
+        # row independently (models/layers.py decode_attention)
+        cache["pos"] = jnp.zeros((max_batch,), jnp.int32)
+        self._cache = cache
+        self._checked = {"prefill": False, "decode": False}
+
+        self._queue: deque = deque()
+        self._visible_at: Dict[int, float] = {}   # rid -> wall time seen
+        self._slots: List[Optional[_Active]] = [None] * max_batch
+        self.steps = 0
+        self.completions: List[Completion] = []
+        # accounting
+        self._occ_busy = 0
+        self._occ_steps = 0
+        self._prefill_time = 0.0
+        self._decode_time = 0.0
+        self._sample_time = 0.0
+        self._tokens_decoded = 0
+        self._prompt_tokens = 0
+        self._gen_tokens = 0
+        self._t_start = time.perf_counter()
+
+    # ------------------------------------------------------------ public --
+    def submit(self, request: Request) -> None:
+        if len(request.prompt) + request.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {request.rid}: prompt ({len(request.prompt)}) + "
+                f"max_new_tokens ({request.max_new_tokens}) exceeds the "
+                f"engine max_len={self.max_len}")
+        self._queue.append(request)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    @property
+    def active(self) -> int:
+        return sum(s is not None for s in self._slots)
+
+    @property
+    def done(self) -> bool:
+        return not self._queue and self.active == 0
+
+    def observed_traffic(self) -> TrafficProfile:
+        """The traffic mix actually served so far — what the drift
+        detector compares against the planned profile."""
+        n = max(len(self.completions), 1)
+        elapsed = max(time.perf_counter() - self._t_start, 1e-9)
+        return TrafficProfile(
+            prompt_len=max(1, round(self._prompt_tokens / n)),
+            gen_len=max(1, round(self._gen_tokens / n)),
+            request_rate=len(self.completions) / elapsed)
+
+    def step(self) -> List[Completion]:
+        """One scheduler iteration: admit, batched decode, evict.
+        Returns the requests that finished this step."""
+        now = time.perf_counter()
+        for r in self._queue:
+            if r.arrival <= self.steps and r.rid not in self._visible_at:
+                self._visible_at[r.rid] = now
+        self._admit_all()
+        finished = self._decode_active()
+        self.steps += 1
+        if self.metrics is not None:
+            self.metrics.gauge("serve_queue_depth", self.queue_depth)
+            self.metrics.gauge("serve_active", self.active)
+            self.metrics.gauge("serve_occupancy",
+                               self.active / self.max_batch)
+            self.metrics.flush(self.steps)
+        if finished and self.replanner is not None and \
+                len(self.completions) % self.replan_check_every == 0:
+            ev = self.replanner.check(self.observed_traffic())
+            if ev is not None:
+                self.replan_events.append(ev)
+                if self.metrics is not None:
+                    self.metrics.count("serve_replans")
+        return finished
+
+    def run(self, requests: Sequence[Request] = (),
+            max_steps: int = 100_000) -> ServeReport:
+        """Serve ``requests`` (plus anything already queued) to
+        completion and report."""
+        all_reqs = list(requests)
+        for r in all_reqs:
+            self.submit(r)
+        while not self.done:
+            if self.steps >= max_steps:
+                raise RuntimeError(f"engine exceeded max_steps={max_steps} "
+                                   f"with {self.queue_depth} queued / "
+                                   f"{self.active} active")
+            self.step()
+        if self.metrics is not None:
+            self.metrics.flush(self.steps)
+        occ = (self._occ_busy / (self._occ_steps * self.max_batch)
+               if self._occ_steps else 0.0)
+        return ServeReport(
+            completions=list(self.completions), steps=self.steps,
+            occupancy=occ,
+            fixed_batch_occupancy=fixed_batch_occupancy(
+                all_reqs, self.max_batch) if all_reqs else 0.0,
+            decode_steps=self._occ_steps, decode_time_s=self._decode_time,
+            prefill_time_s=self._prefill_time,
+            sample_time_s=self._sample_time,
+            tokens_prefill=len(self.completions),
+            tokens_decoded=self._tokens_decoded,
+            replans=len(self.replan_events))
+
+    # --------------------------------------------------------- internals --
+    @staticmethod
+    def _insert_row(full: dict, part: dict, slot) -> dict:
+        """Splice a batch-1 prefill cache into row ``slot`` of the big
+        batched cache.  Every non-``pos`` leaf carries batch on axis 1
+        (layer-stacked caches); ``pos`` is the per-slot position vector."""
+        out = {}
+        for key, val in full.items():
+            if key == "pos":
+                out["pos"] = val.at[slot].set(
+                    part["pos"].astype(val.dtype))
+            else:
+                out[key] = jax.tree_util.tree_map(
+                    lambda f, p: jax.lax.dynamic_update_slice_in_dim(
+                        f, p.astype(f.dtype), slot, axis=1),
+                    val, part[key])
+        return out
+
+    def _admit_all(self) -> None:
+        while True:
+            slot = next((i for i, s in enumerate(self._slots)
+                         if s is None), None)
+            if slot is None:
+                return
+            req = next((r for r in self._queue
+                        if r.arrival <= self.steps), None)
+            if req is None:
+                return
+            self._queue.remove(req)
+            self._admit(req, slot)
+
+    def _admit(self, req: Request, slot: int) -> None:
+        t0 = time.perf_counter()
+        toks = jnp.asarray([req.prompt], jnp.int32)
+        logits, cache1 = self._prefill(self.params, toks)
+        logits = jax.block_until_ready(logits)
+        t_prefill = time.perf_counter() - t0
+        self._prefill_time += t_prefill
+        if not self._checked["prefill"]:
+            registry.check_last_logits(logits, 1, self.cfg.vocab_size,
+                                       "prefill")
+            self._checked["prefill"] = True
+        # one split chain per request, rooted at fold_in(seed, rid): the
+        # prefill sample and every decode sample consume a FRESH subkey
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), req.rid)
+        ts0 = time.perf_counter()
+        first, key = self._sample(logits[0], key)
+        self._sample_time += time.perf_counter() - ts0
+        self._cache = self._insert(self._cache, cache1, slot)
+        ttft = time.perf_counter() - self._visible_at.get(
+            req.rid, t0)
+        self._slots[slot] = _Active(
+            rid=req.rid, prompt_len=len(req.prompt),
+            remaining=req.max_new_tokens - 1, tokens=[first], key=key,
+            next_token=first, decode_time_s=0.0, ttft_s=ttft,
+            admitted_step=self.steps)
+        self._prompt_tokens += len(req.prompt)
+        if self.metrics is not None:
+            self.metrics.observe("serve_ttft_s", ttft)
+            self.metrics.count("serve_requests_admitted")
+            self.metrics.count("serve_tokens_prefill", len(req.prompt))
+        if self.eos_id is not None and first == self.eos_id:
+            self._slots[slot].remaining = 0
+        if self._slots[slot].remaining == 0:
+            self._finish(slot)
+
+    def _decode_active(self) -> List[Completion]:
+        rows = [i for i, s in enumerate(self._slots) if s is not None]
+        if not rows:
+            return []
+        toks = np.zeros((self.max_batch, 1), np.int32)
+        for i in rows:
+            toks[i, 0] = self._slots[i].next_token
+        t0 = time.perf_counter()
+        logits, self._cache = self._decode(
+            self.params, jnp.asarray(toks), self._cache)
+        logits = jax.block_until_ready(logits)
+        dt = time.perf_counter() - t0
+        if not self._checked["decode"]:
+            registry.check_last_logits(logits, self.max_batch,
+                                       self.cfg.vocab_size, "decode_step")
+            self._checked["decode"] = True
+        self._decode_time += dt
+        self._occ_steps += 1
+        self._occ_busy += len(rows)
+        self._tokens_decoded += len(rows)
+        finished = []
+        ts0 = time.perf_counter()
+        for i in rows:
+            s = self._slots[i]
+            tok, s.key = self._sample(logits[i], s.key)
+            s.tokens.append(tok)
+            s.next_token = tok
+            s.decode_time_s += dt
+            s.remaining -= 1
+            if s.remaining == 0 or (self.eos_id is not None
+                                    and tok == self.eos_id):
+                finished.append(self._finish(i))
+        self._sample_time += time.perf_counter() - ts0
+        return finished
+
+    def _finish(self, slot: int) -> Completion:
+        s = self._slots[slot]
+        self._slots[slot] = None
+        comp = Completion(
+            rid=s.rid, prompt_len=s.prompt_len, tokens=s.tokens,
+            ttft_s=s.ttft_s, decode_time_s=s.decode_time_s,
+            admitted_step=s.admitted_step, finished_step=self.steps)
+        self.completions.append(comp)
+        self._gen_tokens += len(s.tokens)
+        if self.metrics is not None:
+            if comp.n_decoded:
+                self.metrics.observe("serve_tpot_s", comp.tpot_s)
+            self.metrics.count("serve_requests_completed")
+            self.metrics.count("serve_tokens_decoded", comp.n_decoded)
+        return comp
+
+    def _sample(self, logits_row, key):
+        if self.temperature <= 0:
+            return int(jnp.argmax(logits_row)), key
+        key, sub = jax.random.split(key)
+        tok = int(jax.random.categorical(
+            sub, logits_row / self.temperature))
+        return tok, key
+
+
+def decode_sequential(bundle: registry.ArchBundle, params,
+                      requests: Sequence[Request], *, max_len: int,
+                      temperature: float = 0.0, seed: int = 0,
+                      eos_id: Optional[int] = None
+                      ) -> Dict[int, List[int]]:
+    """Reference decoder: each request ALONE at batch 1 — the oracle the
+    continuous-batching engine's outputs must match (bit-exactly for
+    dense/ssm/hybrid, token-stream for MoE).  Uses the same per-request
+    PRNG chain as the engine, so sampled streams match too."""
+    cfg = bundle.cfg
+    prefill = jax.jit(
+        lambda p, t: bundle.prefill(p, {"tokens": t}, cfg, max_len))
+    decode = jax.jit(lambda p, t, c: bundle.decode_step(p, t, c, cfg))
+
+    def sample(logits_row, key):
+        if temperature <= 0:
+            return int(jnp.argmax(logits_row)), key
+        key, sub = jax.random.split(key)
+        return int(jax.random.categorical(
+            sub, logits_row / temperature)), key
+
+    out: Dict[int, List[int]] = {}
+    for req in requests:
+        logits, cache = prefill(
+            params, jnp.asarray([req.prompt], jnp.int32))
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), req.rid)
+        tok, key = sample(logits[0], key)
+        tokens = [tok]
+        while len(tokens) < req.max_new_tokens and \
+                (eos_id is None or tokens[-1] != eos_id):
+            logits, cache = decode(
+                params, jnp.asarray([[tokens[-1]]], jnp.int32), cache)
+            tok, key = sample(logits[0], key)
+            tokens.append(tok)
+        out[req.rid] = tokens
+    return out
+
+
+class DriftReplanner:
+    """Traffic-mix drift -> serving replan.
+
+    Thresholds the observed prefill/decode ratio against the planned
+    profile's: when the served mix is ``threshold``x more prefill-heavy
+    (or decode-heavy) than planned, call ``replan_fn(observed)`` —
+    typically a ``core.planner.plan_serving`` closure — and surface the
+    event.  Re-arms only after the plan is refreshed, so a sustained
+    drift fires once, not every check."""
+
+    def __init__(self, planned: TrafficProfile,
+                 replan_fn: Callable[[TrafficProfile], Any],
+                 threshold: float = 1.5):
+        if threshold <= 1.0:
+            raise ValueError(f"threshold > 1 required, got {threshold}")
+        self.planned = planned
+        self.replan_fn = replan_fn
+        self.threshold = threshold
+        self.fired: List[Dict[str, Any]] = []
+
+    def check(self, observed: TrafficProfile) -> Optional[Dict[str, Any]]:
+        ratio = (observed.prefill_decode_ratio
+                 / max(self.planned.prefill_decode_ratio, 1e-9))
+        if 1.0 / self.threshold < ratio < self.threshold:
+            return None
+        result = self.replan_fn(observed)
+        event = {
+            "kind": "serve_replan",
+            "drift_ratio": ratio,
+            "direction": ("prefill-heavy" if ratio >= self.threshold
+                          else "decode-heavy"),
+            "planned": self.planned.to_dict(),
+            "observed": observed.to_dict(),
+            "plan": (result.plan.to_dict()
+                     if hasattr(result, "plan") else None),
+        }
+        # re-arm against the new baseline: the observed mix becomes the
+        # planned one the next drift is measured from
+        self.planned = observed
+        self.fired.append(event)
+        return event

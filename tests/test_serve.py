@@ -1,0 +1,342 @@
+"""Serving stack: continuous-batching engine, KV memory term, SLO planner.
+
+Locks the ISSUE-9 acceptance criteria:
+  * scheduler invariants — admission/eviction/occupancy on a seeded
+    trace, deterministic run-to-run;
+  * continuous-batching outputs BIT-match sequential single-request
+    decoding (dense / ssm / hybrid; MoE guarantees token-stream equality
+    — XLA fuses the scan block body differently per batch width,
+    reassociating fp32 reductions at ~1e-7);
+  * ``costmodel.kv_cache_bytes`` equals the registry's real cache
+    allocation for every arch family;
+  * ``plan_serving`` places prefill on the compute-rich island and
+    decode on the memory-bandwidth-rich island of an asymmetric cluster;
+  * the per-request PRNG split chain (the seed driver's key-reuse fix)
+    and the last-position logits contract.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import costmodel, planner
+from repro.core.cluster import ClusterSpec, DeviceType, NodeGroup
+from repro.core.plan import (ParallelPlan, ServingPlan, ServingSLO,
+                             StagePlacement, TrafficProfile)
+from repro.core.predictor import PerformancePredictor, ServeLoad
+from repro.models import registry
+from repro.serve import (DriftReplanner, Request, ServeEngine,
+                         decode_sequential, fixed_batch_occupancy,
+                         scripted_trace)
+
+ALL_FAMILIES = ("llama3-8b", "mixtral-8x7b", "falcon-mamba-7b",
+                "recurrentgemma-9b", "whisper-tiny", "phi-3-vision-4.2b")
+BITEXACT_ARCHS = ("llama3-8b", "falcon-mamba-7b", "recurrentgemma-9b")
+
+
+def _bundle(arch):
+    b = registry.get_bundle(arch, smoke=True)
+    params = b.init(jax.random.PRNGKey(0), b.cfg)
+    return b, params
+
+
+# ------------------------------------------------------- KV memory term ----
+@pytest.mark.parametrize("arch", ALL_FAMILIES)
+def test_kv_cache_bytes_matches_registry_shapes(arch):
+    cfg = registry.get_config(arch, smoke=True)
+    b = registry.bundle_for(cfg)
+    for batch, max_len in ((1, 16), (3, 48)):
+        cache = b.init_cache(batch, max_len)
+        real = sum(leaf.nbytes
+                   for leaf in jax.tree_util.tree_leaves(cache))
+        real -= cache["pos"].nbytes  # position index, not cache payload
+        assert costmodel.kv_cache_bytes(cfg, batch, max_len) == real
+
+
+def test_peak_memory_serve_mode():
+    """Inference accounting: params + KV/tp + live acts — no optimizer
+    states, no pipeline in-flight term; linear in batch via the KV term."""
+    cfg = registry.get_config("llama3-8b")
+    cluster = ClusterSpec(groups=(NodeGroup(
+        DeviceType("x", peak_tflops=989.0, mfu=0.5), 1),))
+    pred = PerformancePredictor(cluster, cfg)
+    plan = ParallelPlan(stages=(StagePlacement(0, cfg.num_layers, 1, 2,
+                                               is_last=True),),
+                        micro_bs=1, global_batch=1, seq_len=512)
+    lc = pred.src.layer_cost(cfg, 512)
+
+    def expect(batch):
+        return (lc.param_bytes * cfg.num_layers / 2
+                + costmodel.kv_cache_bytes(cfg, batch, 2048) / 2
+                + lc.act_bytes_per_token * batch / 2) / 1e9
+
+    for batch in (1, 8, 32):
+        got = pred.peak_memory(plan, serve=ServeLoad(
+            batch=batch, max_len=2048, act_tokens=batch))
+        assert got == (pytest.approx(expect(batch)),)
+    # train-mode accounting (optimizer states) must be untouched
+    train = pred.peak_memory(plan)[0]
+    assert train > pred.peak_memory(
+        plan, serve=ServeLoad(batch=1, max_len=2048, act_tokens=1))[0]
+
+
+# ------------------------------------------------------------ SLO search ---
+def _asymmetric_cluster():
+    compute = DeviceType("compute-rich", peak_tflops=989.0, mfu=0.5,
+                         hbm_gb=80.0, hbm_gbps=400.0)
+    membw = DeviceType("membw-rich", peak_tflops=300.0, mfu=0.45,
+                       hbm_gb=96.0, hbm_gbps=3200.0)
+    return ClusterSpec(groups=(NodeGroup(compute, 2), NodeGroup(membw, 2)),
+                       eth_gbps=400.0, eth_eff=0.9)
+
+
+def test_plan_serving_disaggregates_on_asymmetric_cluster():
+    cluster = _asymmetric_cluster()
+    cfg = registry.get_config("llama3-8b")
+    res = planner.plan_serving(
+        cluster, cfg, slo=ServingSLO(ttft_s=0.5, tpot_s=0.05),
+        traffic=TrafficProfile(prompt_len=2048, gen_len=256,
+                               request_rate=4.0))
+    plan, p = res.plan, res.predicted
+    assert plan.disaggregated
+    # prefill is FLOPs-bound -> compute-rich island; decode streams
+    # params+KV every step -> memory-bandwidth-rich island
+    assert cluster.groups[plan.prefill_group].device.name == "compute-rich"
+    assert cluster.groups[plan.decode_group].device.name == "membw-rich"
+    assert p.slo_score <= 1.0 and p.fits
+    assert p.request_capacity >= 4.0
+    assert res.evaluated == len(res.log)
+    # round-trip the artifact
+    assert ServingPlan.from_dict(plan.to_dict()) == plan
+
+
+def test_plan_serving_colocates_on_single_island():
+    cluster = ClusterSpec(groups=(NodeGroup(
+        DeviceType("only", peak_tflops=989.0, mfu=0.5, hbm_gb=80.0,
+                   hbm_gbps=2000.0), 2),))
+    cfg = registry.get_config("llama3-8b")
+    res = planner.plan_serving(
+        cluster, cfg, slo=ServingSLO(ttft_s=0.5, tpot_s=0.05),
+        traffic=TrafficProfile(prompt_len=1024, gen_len=128,
+                               request_rate=2.0))
+    assert not res.plan.disaggregated
+
+
+def test_plan_serving_infeasible_raises():
+    cluster = _asymmetric_cluster()
+    cfg = registry.get_config("llama3-8b")
+    with pytest.raises(RuntimeError, match="no feasible placement"):
+        planner.plan_serving(
+            cluster, cfg, slo=ServingSLO(ttft_s=1.0, tpot_s=1.0),
+            traffic=TrafficProfile(prompt_len=2048, gen_len=256,
+                                   request_rate=1e9))
+
+
+# --------------------------------------------------- scheduler invariants --
+def test_scheduler_invariants_seeded_trace():
+    b, params = _bundle("llama3-8b")
+    reqs = scripted_trace(12, vocab_size=b.cfg.vocab_size, seed=3,
+                          prompt_lens=(6, 10, 14),
+                          gen_lens=(4, 8, 12, 16), arrival_every=1)
+    eng = ServeEngine(b, params, max_batch=4, max_len=32)
+    for r in reqs:
+        eng.submit(r)
+    admitted = []
+    while not eng.done:
+        assert eng.active <= 4
+        before = {s.rid for s in eng._slots if s is not None}
+        eng.step()
+        after = {s.rid for s in eng._slots if s is not None}
+        admitted += sorted(after - before)
+    rep = eng.run(())  # nothing left; reuse for report assembly
+    by_rid = {c.rid: c for c in rep.completions}
+    # every request completed with exactly max_new_tokens tokens
+    assert sorted(by_rid) == [r.rid for r in reqs]
+    for r in reqs:
+        assert len(by_rid[r.rid].tokens) == r.max_new_tokens
+        assert by_rid[r.rid].admitted_step >= r.arrival
+    # admission is FIFO among visible requests
+    assert admitted == sorted(admitted)
+    # occupancy: decode slots were shared (mixed gen lengths refill) —
+    # strictly better than the fixed-batch baseline on this trace
+    occ = eng._occ_busy / (eng._occ_steps * 4)
+    assert 0.0 < occ <= 1.0
+    assert occ > fixed_batch_occupancy(reqs, 4)
+
+
+def test_scheduler_deterministic():
+    b, params = _bundle("falcon-mamba-7b")
+    reqs = scripted_trace(6, vocab_size=b.cfg.vocab_size, seed=1,
+                          prompt_lens=(6, 9), gen_lens=(3, 6, 9),
+                          arrival_every=1)
+
+    def streams():
+        eng = ServeEngine(b, params, max_batch=3, max_len=24,
+                          temperature=0.7, seed=11)
+        rep = eng.run(reqs)
+        return {c.rid: c.tokens for c in rep.completions}
+
+    assert streams() == streams()
+
+
+def test_engine_rejects_oversized_and_wrong_family():
+    b, params = _bundle("llama3-8b")
+    eng = ServeEngine(b, params, max_batch=2, max_len=16)
+    with pytest.raises(ValueError, match="exceeds the engine max_len"):
+        eng.submit(Request(rid=0, prompt=(1,) * 10, max_new_tokens=10))
+    wb = registry.get_bundle("whisper-tiny", smoke=True)
+    with pytest.raises(ValueError, match="enc-dec"):
+        ServeEngine(wb, None, max_batch=2, max_len=16)
+
+
+# ----------------------------------------------------------- bit-match -----
+@pytest.mark.parametrize("arch,temp", [("llama3-8b", 0.8),
+                                       ("falcon-mamba-7b", 0.8),
+                                       ("recurrentgemma-9b", 0.0)])
+def test_continuous_batching_bitmatches_sequential(arch, temp):
+    """Mixed-length requests staggered into a shared decode batch emit
+    the SAME token streams as decoding each request alone at batch 1 —
+    per-slot cache rows and positions make batched decode row-separable.
+    max_len=40 > the recurrentgemma smoke window (32), so the rolling-
+    buffer wrap arithmetic is exercised per-row too."""
+    b, params = _bundle(arch)
+    reqs = scripted_trace(8, vocab_size=b.cfg.vocab_size, seed=5,
+                          prompt_lens=(6, 12, 24),
+                          gen_lens=(4, 8, 16), arrival_every=1)
+    eng = ServeEngine(b, params, max_batch=3, max_len=40,
+                      temperature=temp, seed=7)
+    rep = eng.run(reqs)
+    ref = decode_sequential(b, params, reqs, max_len=40,
+                            temperature=temp, seed=7)
+    for c in rep.completions:
+        assert c.tokens == ref[c.rid], f"rid {c.rid} diverged"
+
+
+def test_moe_token_stream_matches_sequential():
+    """MoE logits differ at fp32-ulp between batch widths (scan-body
+    fusion reassociation), so the guarantee is greedy token-stream
+    equality, not bit-equality — see docs/serving.md."""
+    b, params = _bundle("mixtral-8x7b")
+    reqs = scripted_trace(6, vocab_size=b.cfg.vocab_size, seed=2,
+                          prompt_lens=(6, 10), gen_lens=(4, 8),
+                          arrival_every=1)
+    eng = ServeEngine(b, params, max_batch=3, max_len=24)
+    rep = eng.run(reqs)
+    ref = decode_sequential(b, params, reqs, max_len=24)
+    for c in rep.completions:
+        assert c.tokens == ref[c.rid]
+
+
+# ----------------------------------------------- PRNG chain + accounting ---
+def test_prng_split_chain_per_request():
+    """The engine's sampled stream reproduces an explicit
+    fold_in(seed, rid) -> split chain where EVERY sample (first token
+    included) consumes a fresh subkey — the seed driver's bug was
+    sampling the first token with the chain root itself and then
+    splitting that same root for the rest."""
+    b, params = _bundle("llama3-8b")
+    req = Request(rid=42, prompt=(5, 9, 2, 7), max_new_tokens=6)
+    eng = ServeEngine(b, params, max_batch=1, max_len=16,
+                      temperature=0.9, seed=123)
+    rep = eng.run([req])
+    got = rep.completions[0].tokens
+
+    cfg = b.cfg
+    logits, cache = b.prefill(params, {"tokens": jnp.asarray([req.prompt],
+                                                             jnp.int32)},
+                              cfg, 16)
+    key = jax.random.fold_in(jax.random.PRNGKey(123), 42)
+    expect = []
+    for _ in range(6):
+        key, sub = jax.random.split(key)
+        tok = int(jax.random.categorical(sub, logits[0] / 0.9))
+        expect.append(tok)
+        logits, cache = b.decode_step(
+            params, jnp.asarray([[tok]], jnp.int32), cache, cfg)
+    assert got == expect
+
+
+def test_report_token_accounting_disjoint():
+    b, params = _bundle("llama3-8b")
+    reqs = scripted_trace(5, vocab_size=b.cfg.vocab_size, seed=0,
+                          prompt_lens=(6,), gen_lens=(1, 4, 7),
+                          arrival_every=0)
+    rep = ServeEngine(b, params, max_batch=2, max_len=16).run(reqs)
+    # first token of each request comes from prefill, never counted as
+    # decoded; TPOT averages device decode time over DECODED tokens only
+    assert rep.tokens_prefill == len(reqs)
+    assert rep.tokens_decoded == sum(r.max_new_tokens - 1 for r in reqs)
+    d = rep.to_dict()["tokens"]
+    assert d["generated"] == d["first_from_prefill"] + d["decoded"]
+    for c in rep.completions:
+        assert c.n_decoded == len(c.tokens) - 1
+
+
+# -------------------------------------------------- logits-shape contract --
+@pytest.mark.parametrize("arch", ALL_FAMILIES)
+def test_last_logits_contract(arch):
+    b, params = _bundle(arch)
+    cfg = b.cfg
+    batch = registry.make_batch(cfg, batch=2, seq=8, with_labels=False)
+    logits, _ = b.prefill(params, batch, cfg, 16)
+    registry.check_last_logits(logits, 2, cfg.vocab_size)  # passes
+    full, _ = b.forward(params, batch, cfg)                # (B, S, V)
+    with pytest.raises(ValueError, match="full-sequence"):
+        registry.check_last_logits(full, 2, cfg.vocab_size)
+
+
+# ------------------------------------------------------------ drift loop ---
+def test_drift_replanner_fires_and_rearms():
+    planned = TrafficProfile(prompt_len=128, gen_len=128, request_rate=1.0)
+    calls = []
+    rp = DriftReplanner(planned, lambda obs: calls.append(obs) or "newplan",
+                        threshold=1.5)
+    # within threshold: no fire
+    assert rp.check(TrafficProfile(160, 128, 1.0)) is None
+    # prefill-heavy drift: fires, re-arms on the observed mix
+    ev = rp.check(TrafficProfile(512, 128, 1.0))
+    assert ev is not None and ev["direction"] == "prefill-heavy"
+    assert len(calls) == 1
+    assert rp.planned.prompt_len == 512
+    # same mix again: re-armed baseline, no second fire
+    assert rp.check(TrafficProfile(512, 128, 1.0)) is None
+    # decode-heavy swing from the new baseline fires again
+    ev2 = rp.check(TrafficProfile(128, 256, 1.0))
+    assert ev2 is not None and ev2["direction"] == "decode-heavy"
+
+
+def test_engine_replan_loop_end_to_end():
+    """Telemetry -> drift -> replan inside the engine: plan for a
+    decode-heavy mix, serve a prefill-heavy trace, and the replanner
+    fires with a serve_replan event carrying the refreshed placement."""
+    b, params = _bundle("llama3-8b")
+    planned = TrafficProfile(prompt_len=4, gen_len=16, request_rate=1.0)
+    cluster = _asymmetric_cluster()
+    cfg_full = registry.get_config("llama3-8b")
+
+    def replan(obs):
+        return planner.plan_serving(
+            cluster, cfg_full, slo=ServingSLO(ttft_s=0.5, tpot_s=0.05),
+            traffic=obs)
+
+    rp = DriftReplanner(planned, replan, threshold=1.5)
+    reqs = scripted_trace(6, vocab_size=b.cfg.vocab_size, seed=0,
+                          prompt_lens=(24,), gen_lens=(3,),
+                          arrival_every=1)
+    eng = ServeEngine(b, params, max_batch=3, max_len=32, replanner=rp,
+                      replan_check_every=2)
+    rep = eng.run(reqs)
+    assert rep.replans >= 1
+    ev = eng.replan_events[0]
+    assert ev["kind"] == "serve_replan"
+    assert ev["direction"] == "prefill-heavy"
+    assert ev["plan"] is not None
+
+
+# ----------------------------------------------------- fixed-batch oracle --
+def test_fixed_batch_occupancy_oracle():
+    reqs = [Request(rid=i, prompt=(1,), max_new_tokens=g, arrival=0)
+            for i, g in enumerate((17, 5, 9, 13))]
+    # one group of 4: busy = 16+4+8+12 = 40, steps = 16, width 4
+    assert fixed_batch_occupancy(reqs, 4) == pytest.approx(40 / 64)
+    # groups of 2: (17,5) -> 16*2 cap, 20 busy; (9,13) -> 12*2 cap, 20 busy
+    assert fixed_batch_occupancy(reqs, 2) == pytest.approx(40 / 56)

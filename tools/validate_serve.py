@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""Validate the continuous-batching serve smoke run (CI tier-2 gate).
+
+    python tools/validate_serve.py --metrics M.jsonl [--run-log RUN.log]
+
+Checks, without any third-party dependency, that the serving path
+actually exercised iteration-level scheduling:
+
+  * the metrics JSONL header carries a ``run_id``, and the stream
+    contains ``serve_ttft_s`` AND ``serve_tpot_s`` observations plus a
+    ``serve_occupancy`` gauge (the telemetry the replan loop rides);
+  * with ``--run-log``: the driver's final JSON summary (last line)
+    carries the SAME ``run_id`` as the metrics header (artifact
+    attribution), reports ``occupancy > fixed_batch_occupancy`` — the
+    continuous-batching win over the seed fixed-batch driver — and its
+    token accounting is disjoint:
+    ``generated == first_from_prefill + decoded``.
+
+Exit 0 on pass; exit 1 with one line per violation on fail.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def _load(path):
+    out = []
+    for line in Path(path).read_text().splitlines():
+        if line.strip():
+            out.append(json.loads(line))
+    return out
+
+
+def validate(metrics_path, run_log=None):
+    errors = []
+    recs = _load(metrics_path)
+    header = next((r for r in recs if r.get("kind") == "header"), None)
+    run_id = None
+    if header is None or not header.get("run_id"):
+        errors.append("metrics: no header record with a run_id")
+    else:
+        run_id = header["run_id"]
+    names = {(r.get("kind"), r.get("name")) for r in recs}
+    for kind, name in (("observe", "serve_ttft_s"),
+                       ("observe", "serve_tpot_s"),
+                       ("gauge", "serve_occupancy"),
+                       ("gauge", "serve_queue_depth")):
+        if (kind, name) not in names:
+            errors.append(f"metrics: no {kind} record named {name}")
+    summary = None
+    if run_log:
+        last = Path(run_log).read_text().strip().splitlines()[-1]
+        try:
+            summary = json.loads(last)
+        except Exception as e:  # noqa: BLE001
+            errors.append(f"run-log: last line is not the JSON summary: {e}")
+        else:
+            if run_id is not None and summary.get("run_id") != run_id:
+                errors.append(
+                    f"run-log: run_id {summary.get('run_id')!r} does not "
+                    f"match metrics header {run_id!r}")
+            occ = summary.get("occupancy")
+            fixed = summary.get("fixed_batch_occupancy")
+            if occ is None or fixed is None:
+                errors.append("run-log: summary missing occupancy / "
+                              "fixed_batch_occupancy")
+            elif occ <= fixed:
+                errors.append(
+                    f"run-log: continuous-batching occupancy {occ} does "
+                    f"not beat the fixed-batch baseline {fixed}")
+            tok = summary.get("tokens", {})
+            if tok.get("generated") != (tok.get("first_from_prefill", 0)
+                                        + tok.get("decoded", -1)):
+                errors.append(f"run-log: token accounting not disjoint: "
+                              f"{tok}")
+    return errors, summary
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--metrics", required=True)
+    ap.add_argument("--run-log", default=None,
+                    help="driver stdout capture; last line must be the "
+                         "final JSON summary")
+    args = ap.parse_args(argv)
+    errors, summary = validate(args.metrics, args.run_log)
+    for e in errors:
+        print(f"FAIL {e}")
+    if not errors:
+        occ = summary.get("occupancy") if summary else "n/a"
+        print(f"OK serve smoke (occupancy {occ})")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
