@@ -79,6 +79,29 @@ def embedding_flops(cfg: ModelConfig) -> float:
     return 2.0 * cfg.d_model * cfg.vocab_size
 
 
+def attention_flops_fraction(cfg: ModelConfig, seq_len: int) -> float:
+    """Fraction of ``layer_cost`` forward FLOPs that scales with the KV
+    length (the score/value einsums) — the ``attn`` weight of the
+    context-parallel chunk balancer ``segmentation.cp_split``; the
+    remaining ``1 - fraction`` is per-token linear work.  Zero for
+    SSM/recurrent layers (no KV-dependent term), so hybrid stacks get the
+    attn-layer-weighted mean, consistent with ``layer_cost``'s averaging."""
+    H, hd = cfg.n_heads, cfg.hd
+    kv = min(seq_len, cfg.window) if cfg.window else seq_len
+    attn_one = 2.0 * 2 * H * hd * kv
+    kinds = cfg.layer_kinds()
+    total = layer_cost(cfg, seq_len).flops_fwd * len(kinds)
+    attn_total = attn_one * sum(k == "attn" for k in kinds)
+    return attn_total / max(total, 1e-9)
+
+
+def ring_hop_bytes(cfg: ModelConfig, micro_bs: int, chunk_len: int) -> float:
+    """Bytes one context-parallel ring hop carries: the K and V blocks of
+    ``chunk_len`` tokens (ragged rings pad every hop to the LARGEST chunk,
+    so callers pass max(cp_chunks))."""
+    return 2.0 * micro_bs * chunk_len * cfg.n_kv_heads * cfg.hd * BYTES_ACT
+
+
 def kv_cache_bytes(cfg: ModelConfig, batch: int, max_len: int) -> float:
     """Decode-cache bytes for ``batch`` sequences of up to ``max_len``
     tokens — EXACTLY the registry's real cache allocation
@@ -169,6 +192,10 @@ class CostSource(Protocol):
                   transport: str = "gpu") -> float:
         """Effective Gb/s between node groups ga -> gb."""
 
+    def ring_hop_gbps(self, cluster, group: int) -> float:
+        """Effective Gb/s of one context-parallel ring hop (KV-block
+        collective-permute) between the ring ranks inside ``group``."""
+
     def layer_time(self, device_kind: str, cfg: ModelConfig, seq_len: int,
                    micro_bs: int, tp: int) -> Optional[Tuple[float, float]]:
         """Measured (fwd_s, bwd_s) per layer per microbatch on
@@ -225,6 +252,10 @@ class MemoizedCostSource:
                           lambda: self.inner.link_gbps(cluster, ga, gb,
                                                        transport))
 
+    def ring_hop_gbps(self, cluster, group: int) -> float:
+        return self._memo(("rh", id(cluster), group),
+                          lambda: self.inner.ring_hop_gbps(cluster, group))
+
     def layer_time(self, device_kind: str, cfg: ModelConfig, seq_len: int,
                    micro_bs: int, tp: int) -> Optional[Tuple[float, float]]:
         return self._memo(
@@ -253,6 +284,10 @@ class AnalyticCostSource:
     def link_gbps(self, cluster, ga: int, gb: int,
                   transport: str = "gpu") -> float:
         return cluster.link_gbps(ga, gb, transport)
+
+    def ring_hop_gbps(self, cluster, group: int) -> float:
+        # ring ranks live inside one island: the intra-group link speed
+        return cluster.link_gbps(group, group)
 
     def layer_time(self, device_kind: str, cfg: ModelConfig, seq_len: int,
                    micro_bs: int, tp: int) -> Optional[Tuple[float, float]]:

@@ -42,7 +42,17 @@ class ParallelPlan:
     the per-virtual-stage layer counts (virtual order, summing to each
     stage's n_layers per stage) — the planner's chunk-granular dp_split
     writes it; None splits every stage's layers evenly across its
-    chunks."""
+    chunks.
+
+    ``cp`` (context parallelism) splits each stage's dp replicas into
+    ``dp/cp`` data groups of cp ring ranks; rank r holds sequence tokens
+    ``[sum(cp_chunks[:r]), sum(cp_chunks[:r+1]))`` and attention streams
+    KV blocks around the ring (ring attention over the pod axis).
+    ``cp_chunks`` optionally pins unequal per-rank chunk sizes (the
+    planner's ``cp_split`` writes them: the causal triangle makes
+    decreasing chunks optimal, and slower rings get shorter chunks);
+    None splits the sequence evenly (earlier ranks take the
+    remainder)."""
     stages: Tuple[StagePlacement, ...]
     micro_bs: int
     global_batch: int
@@ -54,11 +64,36 @@ class ParallelPlan:
     eager_slack: int = 2     # only meaningful for schedule="1f1b-eager"
     vpp: int = 1             # virtual stages per physical stage
     chunk_layers: Optional[Tuple[int, ...]] = None
+    cp: int = 1              # ring-attention context-parallel degree
+    cp_chunks: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self):
         validate_transport(self.transport)
         if self.vpp < 1:
             raise ValueError(f"vpp must be >= 1, got {self.vpp}")
+        if self.cp < 1:
+            raise ValueError(f"cp must be >= 1, got {self.cp}")
+        if self.cp > 1:
+            for i, st in enumerate(self.stages):
+                if st.dp % self.cp != 0:
+                    raise ValueError(
+                        f"cp={self.cp} must divide every stage dp; "
+                        f"stage {i} has dp={st.dp}")
+            if self.seq_len < self.cp:
+                raise ValueError(
+                    f"cp={self.cp} needs seq_len >= cp, "
+                    f"got seq_len={self.seq_len}")
+        if self.cp_chunks is not None:
+            if len(self.cp_chunks) != self.cp:
+                raise ValueError(
+                    f"cp_chunks needs cp={self.cp} entries, "
+                    f"got {len(self.cp_chunks)}")
+            if any(c < 1 for c in self.cp_chunks):
+                raise ValueError("cp_chunks entries must be >= 1")
+            if sum(self.cp_chunks) != self.seq_len:
+                raise ValueError(
+                    f"cp_chunks sum to {sum(self.cp_chunks)}, "
+                    f"seq_len is {self.seq_len}")
         if self.vpp > 1 and self.schedule != "interleaved-1f1b":
             raise ValueError(
                 f"vpp={self.vpp} requires schedule='interleaved-1f1b', "
@@ -99,16 +134,18 @@ class ParallelPlan:
 
     @property
     def tokens_per_tick(self) -> int:
-        """Sequences entering the pipeline per tick.  lcm over stage DP
-        degrees so every stage's microbatch size is a whole number even when
-        heterogeneous groups carry different DP."""
+        """Sequences entering the pipeline per tick.  lcm over stage DATA-
+        GROUP widths (dp/cp: a cp ring of ranks collectively consumes one
+        microbatch, splitting it on the sequence axis) so every stage's
+        microbatch size is a whole number even when heterogeneous groups
+        carry different DP."""
         l = 1
         for s in self.stages:
-            l = math.lcm(l, s.dp)
+            l = math.lcm(l, s.dp // self.cp)
         return self.micro_bs * l
 
     def stage_micro_bs(self, i: int) -> int:
-        return max(1, self.tokens_per_tick // self.stages[i].dp)
+        return max(1, self.tokens_per_tick // (self.stages[i].dp // self.cp))
 
     @property
     def micro_batches(self) -> int:
@@ -140,6 +177,16 @@ class ParallelPlan:
                 out[c * pp + i] = base + (1 if c < rem else 0)
         return tuple(out)
 
+    @property
+    def cp_chunk_sizes(self) -> Tuple[int, ...]:
+        """Resolved per-ring-rank sequence chunk sizes (length cp, summing
+        to seq_len).  ``cp_chunks`` when the planner pinned them; otherwise
+        an even split with earlier ranks taking the remainder."""
+        if self.cp_chunks is not None:
+            return self.cp_chunks
+        base, rem = divmod(self.seq_len, self.cp)
+        return tuple(base + (1 if r < rem else 0) for r in range(self.cp))
+
     def to_dict(self) -> dict:
         """JSON-serializable form (the adaptation controller broadcasts
         the searched plan to every process before a collective adoption).
@@ -151,7 +198,10 @@ class ParallelPlan:
                 "schedule": self.schedule, "eager_slack": self.eager_slack,
                 "vpp": self.vpp,
                 "chunk_layers": (list(self.chunk_layers)
-                                 if self.chunk_layers is not None else None)}
+                                 if self.chunk_layers is not None else None),
+                "cp": self.cp,
+                "cp_chunks": (list(self.cp_chunks)
+                              if self.cp_chunks is not None else None)}
 
     @classmethod
     def from_dict(cls, d: dict) -> "ParallelPlan":
@@ -164,7 +214,10 @@ class ParallelPlan:
                    vpp=d.get("vpp", 1),
                    chunk_layers=(tuple(d["chunk_layers"])
                                  if d.get("chunk_layers") is not None
-                                 else None))
+                                 else None),
+                   cp=d.get("cp", 1),
+                   cp_chunks=(tuple(d["cp_chunks"])
+                              if d.get("cp_chunks") is not None else None))
 
     def describe(self) -> str:
         seg = "".join(str(s.n_layers) for s in self.stages) \
@@ -181,10 +234,16 @@ class ParallelPlan:
             return (str(vals[0]) if len(set(vals)) == 1
                     else ",".join(map(str, vals)))
 
+        cp = ""
+        if self.cp > 1:
+            chunks = self.cp_chunk_sizes
+            cp = (f" cp={self.cp}"
+                  + (f" chunks={'/'.join(map(str, chunks))}"
+                     if len(set(chunks)) > 1 else ""))
         return (f"pp={self.pp} tp={per_stage(self.tps)} "
                 f"dp={per_stage(self.dps)} "
                 f"mbs={self.micro_bs} m={self.micro_batches} "
-                f"sched={sched} seg={seg}")
+                f"sched={sched} seg={seg}{cp}")
 
 
 # ------------------------------------------------------------- serving -----

@@ -222,6 +222,7 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
            nonuniform: bool = True, schedule: str = "auto",
            eager_slack_options: Sequence[int] = DEFAULT_EAGER_SLACKS,
            vpp_options: Sequence[int] = (2, 3, 4),
+           cp_options: Sequence[int] = (1,),
            explore_orders: bool = True, asymmetric: bool = True,
            calibration: float = 1.0, require_fit: bool = True,
            include_tp_comm: bool = True,
@@ -252,6 +253,14 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
     width, and hops whose (tp, dp) disagree are charged the predictor's
     boundary-reshard cost.  False restores the legacy one-global-tp
     sweep (the uniform A/B baseline).
+
+    ``cp_options`` (fast engine only) additionally sweeps context
+    parallelism: for each cp > 1 that divides every stage's DP (and
+    seq_len >= cp), candidates splitting each microbatch's sequence over
+    a cp-rank ring are priced against the tp/dp/pp alternatives — with
+    ``segmentation.cp_split``'s causal-triangle-balanced UNEQUAL chunk
+    sizes baked into the plan.  The default ``(1,)`` adds no candidates,
+    keeping the sweep (and its output) identical to a cp-less search.
 
     ``baseline_plan`` (fast engine only) scores an incumbent plan — e.g.
     the one currently executing — as an extra candidate under the SAME
@@ -295,9 +304,11 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
 
     # ---- phase 1: enumerate candidate (placement, split) leaves cheaply,
     # with a schedule-independent lower bound each (no simulation yet).
-    # Entries: (lb, tag, micro_bs, vpp, chunk_layers, stages, timings);
-    # vpp == 1 entries are scored under ``scheds``, vpp > 1 entries under
-    # interleaved-1f1b with their own chunk-granular split.
+    # Entries: (lb, tag, micro_bs, vpp, chunk_layers, stages, timings,
+    # cp, cp_chunks); vpp == 1 entries are scored under ``scheds``,
+    # vpp > 1 entries under interleaved-1f1b with their own chunk-granular
+    # split.  cp > 1 entries carry cp-adjusted timings (bottleneck-rank
+    # compute share + ring-hop cost) and their unequal chunk assignment.
     cands: List[tuple] = []
     tp_assigns = _tp_assignments(cluster, tp_options, asymmetric)
     for pp in _candidate_pps(cluster, L, pp_options):                # level 1
@@ -392,7 +403,7 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
                         lb = fastsim.lower_bound(
                             timings, m, pred.dp_allreduce_time(base))
                         cands.append((lb, tag, micro_bs, 1, None,
-                                      stages, timings))
+                                      stages, timings, 1, None))
                     # interleaved-1f1b: chunk-granular min-bottleneck
                     # split over pp*vpp virtual stages (its own layer
                     # assignment — finer chunks re-balance differently)
@@ -403,6 +414,17 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
                             caps, L, vpp, global_batch, seq_len)
                         if cand is not None:
                             cands.append(cand)
+                    # context parallelism: a cp-rank ring per data group
+                    # splits each microbatch's sequence into unequal
+                    # chunks; own probe algebra (micro_batches grows
+                    # x cp) and cp-adjusted timings
+                    if scheds:
+                        for cp in cp_options:
+                            if cp > 1:
+                                cands += _cp_candidates(
+                                    pred, cfg, groups, dp_st, tp_st,
+                                    micro_bs, L, cp, global_batch,
+                                    seq_len, nonuniform, require_fit)
 
     # ---- phase 2: best-first scoring with lower-bound pruning — sorting
     # by bound finds a near-optimal plan early, after which candidates
@@ -429,7 +451,8 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
             if not (require_fit and not p.fits):
                 baseline_time = p.iter_time
                 best = (p, baseline_plan)   # also seeds the pruning cutoff
-    for lb, tag, micro_bs, vpp, chunk_layers, stages, timings in cands:
+    for (lb, tag, micro_bs, vpp, chunk_layers, stages, timings,
+         cp, cp_chunks) in cands:
         if best is not None and lb >= best[0].iter_time:
             pruned += 1
             continue
@@ -441,7 +464,8 @@ def search(cluster: ClusterSpec, cfg: ModelConfig, *, global_batch: int,
             plan = ParallelPlan(stages=stages, micro_bs=micro_bs,
                                 global_batch=global_batch, seq_len=seq_len,
                                 schedule=sched, eager_slack=slack,
-                                vpp=vpp, chunk_layers=chunk_layers)
+                                vpp=vpp, chunk_layers=chunk_layers,
+                                cp=cp, cp_chunks=cp_chunks)
             p = pred.predict(plan, timings=timings)
             evaluated += 1
             log.append((f"{tag} {plan.describe()}", p.iter_time))
@@ -517,7 +541,93 @@ def _interleaved_candidate(pred: PerformancePredictor, cluster: ClusterSpec,
     lb = fastsim.lower_bound(timings, m, pred.dp_allreduce_time(plan),
                              vpp=vpp)
     return (lb, f"dp-vpp{vpp}", micro_bs, vpp, tuple(chunk), stages,
-            timings)
+            timings, 1, None)
+
+
+def _cp_candidates(pred: PerformancePredictor, cfg: ModelConfig,
+                   groups: List[int], dp_st: List[int], tp_st: List[int],
+                   micro_bs: int, L: int, cp: int, global_batch: int,
+                   seq_len: int, nonuniform: bool, require_fit: bool
+                   ) -> List[tuple]:
+    """Phase-1 candidates for one cp width on one placement: each data
+    group's DP splits into (dp/cp) groups of cp-rank rings, a ring
+    collectively consuming one microbatch split on the sequence axis into
+    ``segmentation.cp_split``'s causal-triangle-balanced unequal chunks.
+    The tick algebra changes (micro_batches grows x cp), so the probe,
+    per-stage microbatch sizes, memory caps, and layer split are all
+    re-derived here rather than reusing the cp=1 loop's; timings go
+    through the predictor's ``_cp_adjust`` seam — the same pricing
+    ``predict`` applies — so the lower bound stays a true bound on the
+    simulated time.  Empty when cp doesn't divide every stage's DP, the
+    tick doesn't divide the batch, or no split fits."""
+    pp = len(groups)
+    if seq_len < cp or any(d % cp for d in dp_st):
+        return []
+    attn_f = costmodel.attention_flops_fraction(cfg, seq_len)
+    # per-token objective: lin + attn * prefix_end, with the attention
+    # share growing along the causal triangle (cp_split docstring)
+    chunks = tuple(segmentation.cp_split(
+        seq_len, cp, attn=attn_f / seq_len, lin=1.0 - attn_f))
+    probe = ParallelPlan(
+        stages=tuple(
+            StagePlacement(group=groups[i], n_layers=1, dp=dp_st[i],
+                           tp=tp_st[i], is_last=(i == pp - 1))
+            for i in range(pp)),
+        micro_bs=micro_bs, global_batch=global_batch, seq_len=seq_len,
+        cp=cp, cp_chunks=chunks)
+    if global_batch % probe.tokens_per_tick:
+        return []
+    m = probe.micro_batches
+    mbs_st = [probe.stage_micro_bs(i) for i in range(pp)]
+    coeffs = [pred.stage_coeffs(
+        groups[i], mbs_st[i], tp_st[i], dp_st[i], i == pp - 1,
+        groups[i + 1] if i + 1 < pp else None, seq_len)
+        for i in range(pp)]
+    adj = [pred._cp_adjust(coeffs[i], probe, i) for i in range(pp)]
+    ext = pred.boundary_reshard(probe)
+    resharded = any(x > 0.0 for x in ext)
+    caps = None
+    if require_fit:
+        # activation residency scales with the longest RESIDENT chunk,
+        # not the full sequence — cap layers at the cp-effective length
+        # (loose either way: p.fits stays authoritative per schedule)
+        eff_seq = max(chunks)
+        caps = [pred.stage_max_layers(
+            groups[i], mbs_st[i], tp_st[i], dp_st[i], i, pp, m, eff_seq)
+            for i in range(pp)]
+        if min(caps) < 1 or sum(min(c, L) for c in caps) < L:
+            return []
+    t_pl = [c.fwd_per_layer + c.bwd_per_layer for c in adj]
+    splits: Dict[Tuple[int, ...], str] = {}
+    if nonuniform:
+        offs = [c.fwd_const + c.bwd_const + c.send
+                + (ext[i] if i < pp - 1 else 0.0)
+                for i, c in enumerate(adj)]
+        splits[tuple(segmentation.dp_split(
+            L, t_pl, offs, max_layers=caps))] = f"dp-cp{cp}"
+    splits.setdefault(tuple(segmentation.uniform_split(L, pp)),
+                      f"uniform-cp{cp}")
+    out: List[tuple] = []
+    for split, tag in splits.items():
+        stages = tuple(
+            StagePlacement(group=groups[i], n_layers=split[i],
+                           dp=dp_st[i], tp=tp_st[i],
+                           is_last=(i == pp - 1))
+            for i in range(pp))
+        timings = [c.timing(n) for c, n in zip(adj, split)]
+        if resharded:
+            timings = [
+                simulator.StageTiming(
+                    fwd=t.fwd, bwd=t.bwd,
+                    send=t.send + (ext[i] if i < pp - 1 else 0.0))
+                for i, t in enumerate(timings)]
+        base = ParallelPlan(stages=stages, micro_bs=micro_bs,
+                            global_batch=global_batch, seq_len=seq_len,
+                            cp=cp, cp_chunks=chunks)
+        lb = fastsim.lower_bound(timings, m, pred.dp_allreduce_time(base))
+        out.append((lb, tag, micro_bs, 1, None, stages, timings,
+                    cp, chunks))
+    return out
 
 
 # ---------------------------------------------------------------------------

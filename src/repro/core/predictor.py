@@ -163,11 +163,85 @@ class PerformancePredictor:
         return out
 
     def plan_coeffs(self, plan: ParallelPlan) -> List[StageCoeffs]:
-        return [self.stage_coeffs(
+        return [self._cp_adjust(self.stage_coeffs(
             st.group, plan.stage_micro_bs(i), st.tp, st.dp, st.is_last,
             plan.stages[i + 1].group if i + 1 < plan.pp else None,
-            plan.seq_len, plan.transport)
+            plan.seq_len, plan.transport), plan, i)
             for i, st in enumerate(plan.stages)]
+
+    # ------------------------------------------------ context parallelism --
+    def cp_scales(self, plan: ParallelPlan) -> Tuple[float, float]:
+        """(compute, linear) bottleneck-rank fractions of a stage's
+        cp-ring: ring rank r holds ``c_r`` tokens and — under causal ring
+        attention — attends to the ``b_r``-token prefix ending at its
+        chunk, so its share of the stage's per-layer work is
+
+            (1 - attn_f) * c_r / S  +  attn_f * c_r * b_r / sum(c_j * b_j)
+
+        with ``attn_f`` the KV-scaling FLOPs fraction
+        (``costmodel.attention_flops_fraction``).  The stage's per-layer
+        wall time is the max over ranks (everyone waits for the ring's
+        bottleneck).  The linear scale ``max_r c_r / S`` prices per-token
+        work that does not ride the ring (unembedding, boundary send).
+        Exactly (1.0, 1.0) at cp=1, keeping cp=1 plans byte-identical."""
+        if plan.cp == 1:
+            return 1.0, 1.0
+        key = ("cps", plan.seq_len, plan.cp, plan.cp_chunk_sizes)
+        if self._memo:
+            hit = self._dp_coeffs.get(key)
+            if hit is not None:
+                return hit
+        chunks = plan.cp_chunk_sizes
+        S = float(plan.seq_len)
+        attn_f = costmodel.attention_flops_fraction(self.cfg, plan.seq_len)
+        ends, b = [], 0
+        for c in chunks:
+            b += c
+            ends.append(float(b))
+        denom = sum(c * e for c, e in zip(chunks, ends))
+        s_comp = max((1.0 - attn_f) * c / S + attn_f * c * e / denom
+                     for c, e in zip(chunks, ends))
+        s_lin = max(chunks) / S
+        out = (s_comp, s_lin)
+        if self._memo:
+            self._dp_coeffs[key] = out
+        return out
+
+    def ring_hop_time(self, plan: ParallelPlan, i: int) -> float:
+        """Per-layer FORWARD ring-communication seconds of stage i's
+        cp-ring: cp-1 KV-block collective-permutes per attention layer,
+        each carrying the padded max chunk's K+V bytes (the backward pass
+        re-streams KV and returns dKV — charged 2x by the caller).  Zero
+        at cp=1."""
+        if plan.cp == 1:
+            return 0.0
+        st = plan.stages[i]
+        kinds = self.cfg.layer_kinds()
+        attn_layers = sum(k == "attn" for k in kinds) / len(kinds)
+        if attn_layers == 0.0:
+            return 0.0
+        vol = costmodel.ring_hop_bytes(self.cfg, plan.stage_micro_bs(i),
+                                       max(plan.cp_chunk_sizes))
+        bw = self.src.ring_hop_gbps(self.cluster, st.group)
+        return attn_layers * (plan.cp - 1) * vol / (bw * GBPS)
+
+    def _cp_adjust(self, c: StageCoeffs, plan: ParallelPlan,
+                   i: int) -> StageCoeffs:
+        """Project a stage's cp=1 linear coefficients onto its cp-ring:
+        per-layer compute scales to the bottleneck rank's share, constants
+        and the boundary send to the largest chunk's token fraction, and
+        every attention layer pays the ring's KV-permute hops.  Identity
+        at cp=1 (the same ``StageCoeffs`` object — bit-for-bit timings)."""
+        if plan.cp == 1:
+            return c
+        s_comp, s_lin = self.cp_scales(plan)
+        hop = self.ring_hop_time(plan, i)
+        return StageCoeffs(
+            fwd_per_layer=c.fwd_per_layer * s_comp + hop,
+            fwd_const=c.fwd_const * s_lin,
+            bwd_per_layer=c.bwd_per_layer * s_comp + 2.0 * hop,
+            bwd_const=c.bwd_const * s_lin,
+            send=c.send * s_lin)
 
     def p2p_time(self, ga: int, gb: int, mbs: int, seq_len: int,
                  transport: str = "gpu") -> float:
@@ -267,6 +341,9 @@ class PerformancePredictor:
             wrap = self.p2p_time(
                 plan.stages[-1].group, plan.stages[0].group,
                 plan.stage_micro_bs(pp - 1), plan.seq_len, plan.transport)
+            if plan.cp > 1:
+                # each ring rank wraps only its own chunk's activations
+                wrap *= self.cp_scales(plan)[1]
         # per-hop (tp, dp) boundary resharding rides the same hop as the
         # P2P send (zero on uniform plans)
         resh = self.boundary_reshard(plan)
@@ -290,10 +367,10 @@ class PerformancePredictor:
 
     def stage_timing(self, plan: ParallelPlan, i: int) -> simulator.StageTiming:
         st = plan.stages[i]
-        t = self.stage_coeffs(
+        t = self._cp_adjust(self.stage_coeffs(
             st.group, plan.stage_micro_bs(i), st.tp, st.dp, st.is_last,
             plan.stages[i + 1].group if i + 1 < plan.pp else None,
-            plan.seq_len, plan.transport).timing(st.n_layers)
+            plan.seq_len, plan.transport), plan, i).timing(st.n_layers)
         if i + 1 < plan.pp:
             nx = plan.stages[i + 1]
             extra = self.reshard_time(
@@ -338,7 +415,8 @@ class PerformancePredictor:
         mean-chunk envelope, which mis-sized ragged ``chunk_layers``
         splits in both directions."""
         key = ("peakL", plan.stages, plan.micro_bs, plan.global_batch,
-               plan.seq_len, plan.transport, plan.vpp, plan.virtual_layers)
+               plan.seq_len, plan.transport, plan.vpp, plan.virtual_layers,
+               plan.cp, plan.cp_chunk_sizes)
         if self._memo and trace is None:
             hit = self._dp_coeffs.get(key)
             if hit is not None:
@@ -382,19 +460,27 @@ class PerformancePredictor:
         # chunk_layers splits (no mean-chunk approximation)
         peak_l = (self.interleaved_peak_layers(plan, trace)
                   if schedule == "interleaved-1f1b" else None)
+        # context parallelism: each ring rank holds only its own chunk's
+        # activations (ragged rings size for the LARGEST chunk) plus one
+        # in-flight + one resident KV ring block per live attention layer
+        eff_seq = (max(plan.cp_chunk_sizes) if plan.cp > 1
+                   else plan.seq_len)
         out = []
         for i, st in enumerate(plan.stages):
             params = lc.param_bytes * st.n_layers / st.tp
             opt = params * (6.0 + 2.0 / st.dp)  # fp32 master+m+v ZeRO-1-ish
             per_tok = (lc.act_bytes_per_token * plan.stage_micro_bs(i)
-                       * plan.seq_len / st.tp)
+                       * eff_seq / st.tp)
             if peak_l is not None:
                 acts = per_tok * peak_l[i]
             else:
                 n_mb = simulator.peak_activation_microbatches(
                     i, plan.pp, plan.micro_batches, schedule, eager_slack)
                 acts = per_tok * st.n_layers * n_mb
-            out.append((params + opt + acts) / 1e9)
+            ring = (2.0 * costmodel.ring_hop_bytes(
+                self.cfg, plan.stage_micro_bs(i), eff_seq) / st.tp
+                if plan.cp > 1 else 0.0)
+            out.append((params + opt + acts + ring) / 1e9)
         return tuple(out)
 
     def stage_max_layers(self, group: int, mbs: int, tp: int, dp: int,

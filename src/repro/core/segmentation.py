@@ -102,6 +102,86 @@ def dp_split(n_layers: int, per_layer: Sequence[float],
     return split
 
 
+def cp_split(seq_len: int, cp: int, attn: float, lin: float = 0.0,
+             rates: Optional[Sequence[float]] = None,
+             causal: bool = True) -> List[int]:
+    """Exact min-bottleneck sequence-chunk assignment over cp ring ranks —
+    ``dp_split`` applied to the context axis (HexiSeq).
+
+    Ring rank r holds the contiguous token chunk ``[b_{r-1}, b_r)`` where
+    ``b_r = sum(split[:r+1])``.  Under causal ring attention, rank r's
+    queries attend to every token up to its own chunk end, so its cost is
+
+        ``cost_r = rates[r] * split[r] * (lin + attn * b_r)``   (causal)
+        ``cost_r = rates[r] * split[r] * (lin + attn * seq_len)``  (full)
+
+    with ``lin`` the per-token linear/MLP weight, ``attn`` the
+    per-query-token-per-kv-token attention weight, and ``rates`` optional
+    per-rank slowdown factors (a heterogeneous ring: slower device kinds
+    get shorter chunks).  Minimizes ``max_r cost_r`` subject to
+    ``sum(split) == seq_len``, ``split[r] >= 1``.
+
+    The causal objective is order-dependent (later ranks see longer
+    prefixes), so unlike ``dp_split`` the optimum is found by parametric
+    search: binary-search the bottleneck T with a greedy-maximal-prefix
+    feasibility check (taking the largest feasible chunk at each rank is
+    optimal because a unit of extra prefix costs downstream ranks strictly
+    less than one token of capacity).  With equal rates and causal=True
+    the optimal chunks DECREASE along the ring — the causal triangle makes
+    even a homogeneous ring want unequal chunks.
+    """
+    assert seq_len >= cp, "need at least one token per ring rank"
+    assert attn >= 0.0 and lin >= 0.0 and (attn > 0.0 or lin > 0.0)
+    r_ = ([1.0] * cp if rates is None else [float(x) for x in rates])
+    assert len(r_) == cp and all(x > 0 for x in r_)
+    if not causal:
+        # every rank sees the full kv context: constant per-token cost,
+        # so this is plain rate-proportional balancing
+        attn_eff = [attn * seq_len] * cp
+    else:
+        attn_eff = None
+
+    def caps(T: float) -> Optional[List[int]]:
+        """Greedy maximal chunks under bottleneck T (None = infeasible)."""
+        out, b = [], 0
+        for rank in range(cp):
+            if attn_eff is not None:
+                per_tok = r_[rank] * (lin + attn_eff[rank])
+                c = int((T / per_tok) * (1 + 1e-12)) if per_tok > 0 \
+                    else seq_len
+            elif attn == 0.0:
+                c = int((T / (r_[rank] * lin)) * (1 + 1e-12))
+            else:
+                # rate * c * (lin + attn*(b + c)) <= T, largest integer c
+                p = lin + attn * b
+                disc = p * p + 4.0 * attn * T / r_[rank]
+                c = int(((-p + disc ** 0.5) / (2.0 * attn)) * (1 + 1e-12))
+            # clamp so every later rank keeps room for >= 1 token; the
+            # clamp only shrinks prefixes, so downstream caps only grow
+            c = min(c, seq_len - b - (cp - rank - 1))
+            if c < 1:
+                return None
+            out.append(c)
+            b += c
+        if b < seq_len:
+            return None
+        return out
+
+    lo, hi = 0.0, max(r_) * seq_len * (lin + attn * seq_len)
+    assert caps(hi) is not None
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        if mid <= lo or mid >= hi:
+            break
+        if caps(mid) is None:
+            lo = mid
+        else:
+            hi = mid
+    split = caps(hi)
+    assert sum(split) == seq_len and all(c >= 1 for c in split)
+    return split
+
+
 def rebalance(split: List[int], stage_times: Sequence[float],
               max_moves: int = 64) -> List[int]:
     """Greedy load-balance refinement (rule 1): move one layer at a time from

@@ -18,6 +18,8 @@ Trainer's online telemetry):
                    (online per-stage telemetry: repro.telemetry)
   observed_bubble  {arch, schedule, pp, vpp, m} -> bubble_frac
   link             {scope[, transport]} -> gbps  (measured collectives)
+  ring_hop         {scope} -> gbps  (measured KV-block collective-permute:
+                   the context-parallel ring hop)
 
 ``device_map`` translates ClusterSpec device names to profile device kinds
 (profile a small sample of one device type, predict a cluster of them —
@@ -121,6 +123,16 @@ class ProfiledCostModel:
         v = self._interp(dev, "link", shape, "gbps")
         return v if v is not None else self.fallback.link_gbps(
             cluster, ga, gb, transport)
+
+    def ring_hop_gbps(self, cluster, group: int) -> float:
+        """Measured context-parallel ring-hop bandwidth for ``group``'s
+        device kind (the ``ring_hop`` entries the collective microbench
+        writes from its ppermute case), analytic intra-island link speed
+        when unmeasured."""
+        dev = self._dev(cluster.groups[group].device.name)
+        v = self._interp(dev, "ring_hop", {"scope": "intra"}, "gbps")
+        return v if v is not None else self.fallback.ring_hop_gbps(
+            cluster, group)
 
     def flops_calibrated(self, cfg: ModelConfig, seq_len: int) -> bool:
         return self.store.interpolate(

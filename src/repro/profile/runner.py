@@ -194,6 +194,9 @@ def bench_collectives(store: ProfileStore, dev: str,
     if link_gbps is not None:
         # measured intra-island p2p bandwidth -> the predictor's link model
         store.put(dev, "link", {"scope": "intra"}, {"gbps": link_gbps})
+        # the context-parallel ring hop IS a collective-permute: the same
+        # measurement serves ProfiledCostModel.ring_hop_gbps
+        store.put(dev, "ring_hop", {"scope": "intra"}, {"gbps": link_gbps})
 
 
 # -------------------------------------------------------------------- cli --

@@ -49,7 +49,7 @@ from repro.ckpt import checkpoint as ckpt
 from repro.data.pipeline import DataState, SyntheticTokens
 from repro.models.registry import ArchBundle
 from repro.optim.adamw import AdamWConfig
-from repro.parallel import pipeline
+from repro.parallel import context, pipeline
 from repro.parallel.sharding import ShardingRules
 from repro.telemetry import StageTelemetry
 from repro.train import steps as steps_mod
@@ -180,6 +180,26 @@ class Trainer:
                 and plan.seq_len == self.cfg.seq_len
                 and self.cfg.global_batch % plan.tokens_per_tick == 0)
 
+    def _cp_active(self) -> bool:
+        """A pp == 1, cp > 1 plan matching this trainer's workload runs
+        the SPMD ring-attention loss (repro.parallel.context) in place of
+        the reference loss.  pp > 1 plans keep the pipeline step whatever
+        their cp: on single-host test meshes the sequence axis runs
+        monolithic inside each stage and the plan's cp stays advisory —
+        the predictor still prices it, ``schedule_health`` still compares
+        against it.  Models outside the cp builder's scope (hybrid
+        stacks, SWA, MoE) also stay on the reference loss."""
+        plan = self.plan
+        if (plan is None or plan.pp != 1 or plan.cp <= 1
+                or plan.global_batch != self.cfg.global_batch
+                or plan.seq_len != self.cfg.seq_len):
+            return False
+        try:
+            context.check_cp_supported(self.bundle.cfg)
+        except ValueError:
+            return False
+        return True
+
     def _build(self):
         if self._pipeline_active():
             plan = self.plan
@@ -203,6 +223,14 @@ class Trainer:
                 layers_per_stage=list(plan.virtual_layers), vpp=plan.vpp,
                 telemetry=(self.telemetry if mode == "callback" else None),
                 stage_tp=list(plan.tps))
+            self.train_step = steps_mod.make_train_step(
+                self.bundle, self.rules, self.opt_cfg, loss_fn=loss_fn)
+        elif self._cp_active():
+            # cp ring execution: same state layout and train step as the
+            # reference path, only the loss is the pod-axis ring program
+            self.telemetry = None
+            loss_fn = context.make_cp_loss_fn(
+                self.bundle.cfg, self.mesh, self.plan.cp_chunk_sizes)
             self.train_step = steps_mod.make_train_step(
                 self.bundle, self.rules, self.opt_cfg, loss_fn=loss_fn)
         else:

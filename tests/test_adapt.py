@@ -478,6 +478,48 @@ def test_e2e_link_degrade_triggers_replan_schedule(tmp_path):
     assert all(np.isfinite(v) for v in r["losses"])
 
 
+def test_e2e_cp_ring_link_degrade_triggers_replan_schedule(tmp_path):
+    """cp composed with pp (carried-forward "schedule replans in anger"):
+    under a pp>1 plan the cp ring is an advisory pricing dimension — the
+    pipeline still executes, and a slowed pod link stretches ring hops
+    and boundary sends alike while stage compute stays healthy.  The
+    policy must fire ``replan-schedule`` (no straggler blamed) and the
+    re-search must sweep ``cp_options`` on the UNCHANGED cluster."""
+    from repro.core import segmentation
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    bundle = registry.get_bundle("llama3-8b", smoke=True, num_layers=6)
+    # two accelerators per island so every stage has dp=2 (cp=2 | dp)
+    cl = C.ClusterSpec(groups=(C.NodeGroup(C.AMD, 1, accel_per_node=2),
+                               C.NodeGroup(C.GPU_A, 1, accel_per_node=2)))
+    chunks = tuple(segmentation.cp_split(32, 2, attn=0.5 / 32, lin=0.5))
+    assert chunks[0] > chunks[1]            # causal triangle: ragged ring
+    plan = ParallelPlan(stages=(StagePlacement(0, 3, 2, 1, False),
+                                StagePlacement(1, 3, 2, 1, True)),
+                        micro_bs=2, global_batch=8, seq_len=32,
+                        cp=2, cp_chunks=chunks)
+    policy = ReplanPolicy(_cfg(patience=2, cooldown=4, baseline_steps=2,
+                               ewma=1.0, min_gain=0.0))
+    kw = dict(ADAPT_SEARCH_KW, cp_options=(1, 2))
+    t = Trainer(bundle, mesh,
+                TrainerConfig(global_batch=8, seq_len=32,
+                              ckpt_dir=str(tmp_path / "ckpt"),
+                              ckpt_every=100, replan_profile_min_obs=4),
+                cluster=cl, plan=plan, profile_store=ProfileStore(),
+                policy=policy, adapt_search_kw=kw)
+    assert t._pipeline_active() and not t._cp_active()
+    t.run(4)
+    h0 = t.schedule_health()
+    assert h0 is not None and h0["ratio"] > 0.0
+    t.inject_link_degrade(8.0 * policy.cfg.bubble_enter / h0["ratio"])
+    r = t.run(6)
+    trigs = [e for e in t.adapt_log if e.action == "trigger"]
+    assert trigs and trigs[0].detail["action"] == "replan-schedule"
+    assert "stage" not in trigs[0].detail         # no straggler blamed
+    rep = next(e for e in t.adapt_log if e.action == "replan")
+    assert rep is not None                        # cp-aware search ran
+    assert all(np.isfinite(v) for v in r["losses"])
+
+
 def test_planner_infeasible_incumbent_records_no_baseline():
     """An incumbent that fails require_fit is scored for the log but must
     NOT become the expected-gain baseline: gain_ok's "no scored incumbent
@@ -528,6 +570,10 @@ def test_plan_dict_roundtrip():
                      micro_bs=1, global_batch=8, seq_len=64,
                      schedule="interleaved-1f1b", vpp=2,
                      chunk_layers=(2, 1, 3, 2)),
+        ParallelPlan(stages=(StagePlacement(0, 3, 2, 1, False),
+                             StagePlacement(1, 3, 2, 1, True)),
+                     micro_bs=2, global_batch=8, seq_len=32,
+                     cp=2, cp_chunks=(20, 12)),
     ]
     for p in plans:
         wired = json.loads(json.dumps(p.to_dict()))

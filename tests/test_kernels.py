@@ -131,3 +131,75 @@ def test_model_attention_uses_same_math():
     want = ref.flash_attention_ref(q, k, v, causal=True)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------- ring attention step ----
+def _ring_state(B, Cq, H, hd):
+    from repro.kernels.ring_attention import NEG_INF
+    return (jnp.full((B, Cq, H, 1), NEG_INF, jnp.float32),
+            jnp.zeros((B, Cq, H, 1), jnp.float32),
+            jnp.zeros((B, Cq, H, hd), jnp.float32))
+
+
+@pytest.mark.parametrize("q_start,k_start,k_valid", [
+    (0, 0, 48),       # self hop (ring step 0): causal diagonal inside
+    (48, 0, 48),      # past hop: fully visible prefix block
+    (0, 48, 48),      # wrap hop: KV from a LATER chunk — fully masked
+    (64, 32, 17),     # masked partial chunk: only 17 of 48 rows real
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ring_step_matches_ref(q_start, k_start, k_valid, dtype):
+    """One Pallas ring hop (interpret mode) vs the jnp fold, across the
+    hop geometries the ring visits: self, past, wrap and ragged-partial
+    KV blocks.  The carried (m, l, acc) state must agree element-wise —
+    the ring result is only as good as every intermediate fold."""
+    import math
+    from repro.kernels import ring_attention as ra
+    B, Cq, Ck, H, Hk, hd = 2, 48, 48, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, Cq, H, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Ck, Hk, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Ck, Hk, hd), jnp.float32).astype(dtype)
+    # a warm carry (from a previous self hop) so the fold is a real merge
+    m0, l0, acc0 = ra._ring_step_ref(
+        q, q[:, :, :Hk], v, *_ring_state(B, Cq, H, hd),
+        q_start=q_start, k_start=q_start, k_valid=Cq, causal=True,
+        sm_scale=1.0 / math.sqrt(hd))
+    want = ra._ring_step_ref(q, k, v, m0, l0, acc0, q_start=q_start,
+                             k_start=k_start, k_valid=k_valid, causal=True,
+                             sm_scale=1.0 / math.sqrt(hd))
+    got = ra.ring_step(q, k, v, m0, l0, acc0, q_start=q_start,
+                       k_start=k_start, k_valid=k_valid, causal=True,
+                       block_q=32, block_k=32, interpret=True)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32), **_tol(dtype))
+
+
+def test_ring_step_fully_masked_hop_is_noop():
+    """A wrap hop under causal masking (every key in the future) must pass
+    the carried state through bit-exactly once a self hop seeded a finite
+    max — the SPMD no-causal-skip invariant the cp loss builder relies
+    on."""
+    import math
+    from repro.kernels import ring_attention as ra
+    B, C, H, Hk, hd = 1, 32, 2, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (B, C, H, hd))
+    k = jax.random.normal(ks[1], (B, C, Hk, hd))
+    v = jax.random.normal(ks[2], (B, C, Hk, hd))
+    state = ra._ring_step_ref(q, k, v, *_ring_state(B, C, H, hd),
+                              q_start=0, k_start=0, k_valid=C, causal=True,
+                              sm_scale=1.0 / math.sqrt(hd))
+    for step in (ra._ring_step_ref,):
+        m1, l1, acc1 = step(q, k, v, *state, q_start=0, k_start=C,
+                            k_valid=C, causal=True,
+                            sm_scale=1.0 / math.sqrt(hd))
+        for a, b in zip((m1, l1, acc1), state):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    m1, l1, acc1 = ra.ring_step(q, k, v, *state, q_start=0, k_start=C,
+                                k_valid=C, causal=True, block_q=32,
+                                block_k=32, interpret=True)
+    for a, b in zip((m1, l1, acc1), state):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)

@@ -125,6 +125,87 @@ def test_paper_cluster_timing_corpus():
                     t, m, vpp=vpp) - 1e-9
 
 
+def test_paper_cluster_cp_timing_corpus():
+    """cp composed with pp/vpp on the paper's 96N768D cluster: the
+    cp-adjusted timings (ring-bottleneck compute scaling + per-layer hop
+    sends) drive fastsim to exact oracle agreement, the bound stays
+    valid, and ``predict`` reproduces the oracle bit for bit.  cp
+    multiplies the microbatch count (a ring collectively consumes one
+    tick), so these plans also lock the cp tick algebra against the DES."""
+    cl = C.paper_cluster_of_size(96)
+    from repro.core import costmodel
+    ran = 0
+    for cfg in (LLAMA2_70B, LLAMA2_140B):
+        pred = PerformancePredictor(cl, cfg, include_tp_comm=False)
+        attn_f = costmodel.attention_flops_fraction(cfg, 4096)
+        for pp in (10, 12):
+            groups = planner._stage_groups(cl, pp)
+            dpg = [cl.groups[g].n_accel // (8 * groups.count(g))
+                   for g in range(len(cl.groups))]
+            split = segmentation.uniform_split(cfg.num_layers, pp)
+            stages = tuple(
+                StagePlacement(group=groups[i], n_layers=split[i],
+                               dp=dpg[groups[i]], tp=8,
+                               is_last=(i == pp - 1))
+                for i in range(pp))
+            for cp in (2, 4):
+                if any(s.dp % cp for s in stages):
+                    continue
+                chunks = tuple(segmentation.cp_split(
+                    4096, cp, attn=attn_f / 4096, lin=1.0 - attn_f))
+                assert len(set(chunks)) > 1      # genuinely unequal
+                for sch, vpp in (("1f1b", 1), ("interleaved-1f1b", 2)):
+                    plan = ParallelPlan(
+                        stages=stages, micro_bs=1, global_batch=960,
+                        seq_len=4096, schedule=sch, vpp=vpp,
+                        cp=cp, cp_chunks=chunks)
+                    nocp = dataclasses.replace(plan, cp=1, cp_chunks=None)
+                    assert plan.micro_batches == cp * nocp.micro_batches
+                    if sch == "interleaved-1f1b":
+                        t = pred.virtual_timings(plan)
+                    else:
+                        t = [pred.stage_timing(plan, i)
+                             for i in range(pp)]
+                    m = plan.micro_batches
+                    dp = pred.dp_allreduce_time(plan)
+                    r = _assert_equal(t, m, sch, vpp=vpp, dp=dp)
+                    assert r.iter_time >= fastsim.lower_bound(
+                        t, m, dp, vpp=vpp) - 1e-9
+                    assert pred.predict(plan).iter_time == \
+                        pytest.approx(r.iter_time, rel=1e-12)
+                    ran += 1
+    assert ran >= 8, "paper cluster must admit cp in {2,4} plans"
+
+
+def test_planner_cp_winner_matches_oracle():
+    """The acceptance preset (tp-capped homogeneous island, 32k seq):
+    the planner CHOOSES cp>1 with unequal decreasing chunks, and the
+    winning plan's cp-adjusted timings pass the fastsim==oracle
+    equivalence check like every other planned schedule."""
+    from repro.models import registry
+    cfg = registry.get_config("llama3-8b")
+    cl = C.homogeneous_cluster(C.GPU_A, 8)
+    res = planner.search(cl, cfg, global_batch=8, seq_len=32768,
+                         pp_options=[2, 4], tp_options=(1, 2),
+                         micro_bs_options=(1,), vpp_options=(2,),
+                         cp_options=(1, 2, 4))
+    plan = res.plan
+    assert plan.cp > 1
+    chunks = plan.cp_chunk_sizes
+    assert len(set(chunks)) > 1
+    assert all(a >= b for a, b in zip(chunks, chunks[1:]))
+    pred = PerformancePredictor(cl, cfg)
+    if plan.schedule == "interleaved-1f1b":
+        t = pred.virtual_timings(plan)
+    else:
+        t = [pred.stage_timing(plan, i) for i in range(plan.pp)]
+    r = _assert_equal(t, plan.micro_batches, plan.schedule, vpp=plan.vpp,
+                      slack=plan.eager_slack,
+                      dp=pred.dp_allreduce_time(plan))
+    assert res.prediction.iter_time == pytest.approx(r.iter_time,
+                                                     rel=1e-9)
+
+
 def test_interleaved_beats_strict_on_deep_uniform():
     """The point of interleaving: on a deep uniform pipeline the finer
     warmup/drain ramp strictly shrinks the bubble."""
